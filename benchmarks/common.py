@@ -1,0 +1,38 @@
+"""Shared benchmark plumbing: CSV emission + tiny timing helpers."""
+from __future__ import annotations
+
+import pathlib
+import time
+from typing import Callable, Iterable
+
+import jax
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def emit(rows: Iterable[dict], name: str) -> None:
+    rows = list(rows)
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    if not rows:
+        return
+    cols = list(rows[0].keys())
+    lines = [",".join(cols)]
+    for r in rows:
+        lines.append(",".join(str(r[c]) for c in cols))
+    out = RESULTS_DIR / f"{name}.csv"
+    out.write_text("\n".join(lines) + "\n")
+    print(f"# wrote {out}")
+    print("\n".join(lines))
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return 1e6 * times[len(times) // 2]

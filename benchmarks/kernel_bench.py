@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU / Mosaic on TPU) vs
+the jnp reference path, plus FLOP counts so TPU runs can report achieved
+intensity.  On this CPU container the numbers check plumbing, not perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels import ops, ref
+
+
+def run() -> list:
+    key = jax.random.key(0)
+    rows = []
+
+    s, d = 512, 64
+    q = jax.random.normal(key, (4, s, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (4, s, d), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (4, s, d), jnp.float32)
+    ref_fa = jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, causal=True))
+    rows.append(dict(kernel="flash_attention", shape=f"4x{s}x{d}",
+                     flops=4 * 2 * 2 * s * s * d,
+                     ref_us=f"{time_call(ref_fa, q, k, v):.0f}",
+                     pallas_us=f"{time_call(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v):.0f}"))
+
+    b, f, c = 512, 64, 10
+    qq = jax.random.normal(key, (b, f))
+    mu = jax.random.normal(jax.random.fold_in(key, 3), (c, f))
+    a = jax.random.normal(jax.random.fold_in(key, 4), (c, f, f))
+    sinv = jnp.einsum("cij,ckj->cik", a, a) + 0.1 * jnp.eye(f)
+    rows.append(dict(kernel="mahalanobis", shape=f"{b}x{f}x{c}",
+                     flops=2 * b * c * f * f,
+                     ref_us=f"{time_call(jax.jit(ref.mahalanobis_ref), qq, mu, sinv):.0f}",
+                     pallas_us=f"{time_call(ops.mahalanobis, qq, mu, sinv):.0f}"))
+
+    x = jax.random.normal(key, (1024, 128))
+    y = jax.random.randint(jax.random.fold_in(key, 5), (1024,), 0, 16)
+    ref_sp = jax.jit(lambda a, b: ref.segment_pool_ref(a, b, 16))
+    rows.append(dict(kernel="segment_pool", shape="1024x128x16",
+                     flops=2 * 1024 * 128 * 16,
+                     ref_us=f"{time_call(ref_sp, x, y):.0f}",
+                     pallas_us=f"{time_call(lambda a, b: ops.segment_pool(a, b, 16), x, y):.0f}"))
+
+    xx = jax.random.normal(key, (8, 128, 256), jnp.float32)
+    ww = jax.random.normal(jax.random.fold_in(key, 6), (8, 256, 128), jnp.float32)
+    rows.append(dict(kernel="gmm", shape="8x128x256x128",
+                     flops=2 * 8 * 128 * 256 * 128,
+                     ref_us=f"{time_call(jax.jit(ref.gmm_ref), xx, ww):.0f}",
+                     pallas_us=f"{time_call(ops.gmm, xx, ww):.0f}"))
+    return rows
+
+
+def main() -> None:
+    emit(run(), "kernel_bench")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Roofline table (deliverable g): reads the dry-run JSON and emits the
+per-cell three-term analysis as CSV + markdown."""
+from __future__ import annotations
+
+import pathlib
+
+from benchmarks.common import RESULTS_DIR, emit
+from repro.roofline.analysis import format_markdown, load_table
+
+def _dryrun_path():
+    for name in ("dryrun_opt.json", "dryrun.json"):
+        p = RESULTS_DIR / name
+        if p.exists():
+            return p
+    return RESULTS_DIR / "dryrun.json"
+
+
+DRYRUN = _dryrun_path()
+
+
+def run() -> list:
+    rows = load_table(DRYRUN, mesh="single")
+    out = []
+    for r in rows:
+        if "skipped" in r:
+            out.append(dict(arch=r["arch"], shape=r["shape"],
+                            t_compute_ms="", t_memory_ms="", t_coll_ms="",
+                            bottleneck="skipped", useful="", frac=""))
+            continue
+        out.append(dict(
+            arch=r["arch"], shape=r["shape"],
+            t_compute_ms=f"{1e3*r['t_compute']:.3f}",
+            t_memory_ms=f"{1e3*r['t_memory']:.3f}",
+            t_coll_ms=f"{1e3*r['t_collective']:.3f}",
+            bottleneck=r["bottleneck"],
+            useful=f"{r['useful_ratio']:.3f}",
+            frac=f"{r['roofline_fraction']:.4f}",
+        ))
+    md = format_markdown(rows)
+    (RESULTS_DIR / "roofline.md").write_text(md + "\n")
+    return out
+
+
+def main() -> None:
+    if not DRYRUN.exists():
+        print("no dryrun.json — run `python -m repro.launch.dryrun` first")
+        return
+    emit(run(), "roofline")
+
+
+if __name__ == "__main__":
+    main()

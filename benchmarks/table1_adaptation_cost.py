@@ -1,0 +1,54 @@
+"""Paper Table 1 (test-time adaptation cost): MACs (via AOT cost
+analysis), number of steps, and wall-clock per task for each learner
+family — the paper's headline contrast between 1-forward meta-learners
+and K-step fine-tuners.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.meta_learners import MetaLearnerConfig, make_learner
+from repro.core.set_encoder import SetEncoderConfig
+from repro.data.episodic import EpisodicImageConfig, sample_image_task
+from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
+
+LEARNERS = (
+    ("protonets", "1F"),
+    ("cnaps", "1F"),
+    ("simple_cnaps", "1F"),
+    ("fomaml", "15FB"),
+    ("finetuner", "50FB"),
+)
+
+
+def run() -> list:
+    bb = make_conv_backbone(ConvBackboneConfig(widths=(16, 32), feature_dim=64))
+    set_cfg = SetEncoderConfig(kind="conv", conv_blocks=2, conv_width=16,
+                               task_dim=32)
+    task = sample_image_task(jax.random.key(0), EpisodicImageConfig(
+        way=5, shot=10, query_per_class=4, image_size=32))
+    rows = []
+    for kind, steps in LEARNERS:
+        inner = int(steps.rstrip("FB").rstrip("F") or 1)
+        cfg = MetaLearnerConfig(kind=kind, way=5, inner_steps=inner)
+        lr = make_learner(cfg, bb, set_cfg)
+        params = lr.init(jax.random.key(1))
+
+        adapt = jax.jit(lambda p, sx, sy: lr.adapt(p, sx, sy))
+        lowered = adapt.lower(params, task.support_x, task.support_y)
+        cost = lowered.compile().cost_analysis() or {}
+        macs = float(cost.get("flops", 0.0)) / 2.0
+        wall_us = time_call(adapt, params, task.support_x, task.support_y)
+        rows.append(dict(model=kind, adapt_macs=f"{macs:.3e}",
+                         steps=steps, wall_us=f"{wall_us:.0f}"))
+    return rows
+
+
+def main() -> None:
+    emit(run(), "table1_adaptation_cost")
+
+
+if __name__ == "__main__":
+    main()

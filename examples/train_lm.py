@@ -1,0 +1,75 @@
+"""End-to-end LM training driver (deliverable b): train a ~100M-param
+reduced config for a few hundred steps with the full production substrate
+— sharded data feed, AdamW + cosine schedule, gradient clipping, atomic
+checkpointing with auto-resume, straggler monitoring.
+
+    PYTHONPATH=src python examples/train_lm.py --arch minitron-4b --steps 300
+
+On a pod this same driver runs the FULL config via --full (the mesh and
+sharding rules come from repro.launch.mesh / repro.sharding.rules).
+"""
+import argparse
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.optim.schedules import cosine_schedule
+from repro.train.checkpoint import CheckpointManager
+from repro.train.loop import train
+from repro.train.step import adamw_for, make_init_state, make_train_step
+
+
+def scaled_100m(arch: str):
+    """A ~100M-param member of the arch's family (CPU-trainable shape)."""
+    cfg = get_smoke_config(arch)
+    return dataclasses.replace(
+        cfg, n_layers=max(cfg.n_layers, 4), d_model=256,
+        d_ff=cfg.d_ff * 4 if cfg.d_ff else 0, vocab=8192, max_seq=2048)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="minitron-4b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full assigned config (pod-scale)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else scaled_100m(args.arch)
+    print(f"arch={cfg.name} layers={cfg.n_layers} d_model={cfg.d_model} "
+          f"vocab={cfg.vocab}")
+
+    init = make_init_state(cfg, adamw_for(cfg))
+    schedule = functools.partial(cosine_schedule, peak=3e-4, warmup_steps=20,
+                                 total_steps=args.steps)
+    step = make_train_step(cfg, adamw_for(cfg), schedule=schedule)
+
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+        branching=4))
+
+    def batch_at(s):
+        return {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    template = jax.eval_shape(init, jax.random.key(0))
+    result = train(init(jax.random.key(0)), step, batch_at, args.steps,
+                   ckpt=ckpt, ckpt_every=100, state_template=template,
+                   log_every=25)
+    if result.resumed_from is not None:
+        print(f"(resumed from checkpointed step {result.resumed_from})")
+    print(f"final loss: {result.metrics_history[-1]['loss']:.4f} "
+          f"(first: {result.metrics_history[0]['loss']:.4f})")
+    if result.straggler_steps:
+        print(f"straggler steps flagged: {result.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Shared low-level utilities: pytree math, initializers, dtype policy."""
+from repro.common.tree import (
+    tree_add,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+    tree_dot,
+    global_norm,
+    tree_size,
+    tree_cast,
+    tree_stop_gradient,
+)
+from repro.common.init import (
+    lecun_normal,
+    normal_init,
+    zeros_init,
+    ones_init,
+    truncated_normal_init,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+    "tree_dot",
+    "global_norm",
+    "tree_size",
+    "tree_cast",
+    "tree_stop_gradient",
+    "lecun_normal",
+    "normal_init",
+    "zeros_init",
+    "ones_init",
+    "truncated_normal_init",
+]

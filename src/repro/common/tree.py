@@ -1,0 +1,63 @@
+"""Pytree arithmetic helpers (the subset of optax/flax utilities we need).
+
+All functions are jit-safe and operate leaf-wise on arbitrary pytrees of
+jnp arrays.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    """Leaf-wise a + b."""
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """Leaf-wise a - b."""
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    """Leaf-wise s * a for scalar s."""
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    """Sum over all leaves of <a_leaf, b_leaf> (flattened inner product)."""
+    leaves = jax.tree.leaves(jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b))
+    return jnp.sum(jnp.stack([jnp.asarray(l, jnp.float32) for l in leaves]))
+
+
+def global_norm(a) -> jnp.ndarray:
+    """L2 norm over the concatenation of all leaves."""
+    leaves = jax.tree.leaves(a)
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    return jnp.sqrt(sq)
+
+
+def tree_size(a) -> int:
+    """Total number of scalar parameters in the tree (static)."""
+    return sum(x.size for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    """Cast all floating leaves to `dtype`, leave integer leaves alone."""
+
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(_cast, a)
+
+
+def tree_stop_gradient(a):
+    return jax.tree.map(jax.lax.stop_gradient, a)

@@ -1,0 +1,3 @@
+"""The paper's contribution: the LITE estimator (repro.core.lite), the
+meta-learner families it plugs into (repro.core.meta_learners), and the
+estimator diagnostics reproducing the paper's §5.3 analysis."""

@@ -1,0 +1,68 @@
+"""Episodic task abstractions (paper §2).
+
+A task τ is a support set D_S = {(x_n, y_n)}_{n=1..N} and a query set
+D_Q = {(x*_m, y*_m)}_{m=1..M} drawn over the same classes.  Labels are
+task-local (0..way-1).  Tasks are plain pytrees so they can be sharded,
+scanned over, and fed to jit'd steps directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class Task:
+    """One episodic task. Leaves:
+
+      support_x: (N, ...) inputs (images, token sequences, embeddings)
+      support_y: (N,) int32 task-local labels in [0, way)
+      query_x:   (M, ...) inputs
+      query_y:   (M,) int32 task-local labels
+      way:       static number of classes (data field would break pytree
+                 flattening under vmap; kept as metadata)
+    """
+
+    support_x: jnp.ndarray
+    support_y: jnp.ndarray
+    query_x: jnp.ndarray
+    query_y: jnp.ndarray
+    way: int = dataclasses.field(metadata=dict(static=True), default=5)
+
+    @property
+    def n_support(self) -> int:
+        return self.support_x.shape[0]
+
+    @property
+    def n_query(self) -> int:
+        return self.query_x.shape[0]
+
+
+def validate_task(task: Task) -> None:
+    """Host-side invariant checks (used by tests and the data pipeline)."""
+    assert task.support_x.shape[0] == task.support_y.shape[0], "support len mismatch"
+    assert task.query_x.shape[0] == task.query_y.shape[0], "query len mismatch"
+
+
+def query_batches(task: Task, batch_size: int):
+    """Split the query set into ceil(M / batch_size) padded batches plus a
+    per-example weight mask (Algorithm 1's outer loop).  Returns
+    (query_x[B, Mb, ...], query_y[B, Mb], weight[B, Mb])."""
+    m = task.query_x.shape[0]
+    b = -(-m // batch_size)
+    pad = b * batch_size - m
+
+    def _pad(a):
+        cfg = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, cfg)
+
+    qx = _pad(task.query_x).reshape((b, batch_size) + task.query_x.shape[1:])
+    qy = _pad(task.query_y).reshape(b, batch_size)
+    w = (jnp.arange(b * batch_size) < m).astype(jnp.float32).reshape(b, batch_size)
+    return qx, qy, w

@@ -1,0 +1,254 @@
+"""LITE — Large Image and Task Episodic training (Bronskill et al., NeurIPS 2021).
+
+The paper's contribution, as a composable JAX transform.
+
+Core observation (paper Eq. 5–8): when the loss depends on the support set
+only through a permutation-invariant *sum* of per-example encodings,
+
+    L = L( e_phi(D_S) ),   e_phi(D_S) = sum_n e_phi(x_n, y_n),
+
+the gradient decomposes over support examples and admits the unbiased
+Monte-Carlo estimator
+
+    dL/dphi  ≈  (N/H) * L'(e_phi(D_S)) * sum_{h in H} d e^(n_h) / dphi,
+
+where the H indices are drawn uniformly from {1..N}.  Crucially the forward
+value e_phi(D_S) is EXACT (all N examples contribute); only the backward pass
+is subsampled.  Memory drops from O(N) stored activations to
+O(|H| + chunk_size): the complement set is forwarded in no-grad chunks whose
+activations XLA never materializes for backward.
+
+JAX realization
+---------------
+PyTorch toggles ``torch.grad.enabled``; in JAX the same effect is a
+straight-through combinator built from ``lax.stop_gradient``:
+
+    combined = value_full_stopped + scale * (value_H - stop_grad(value_H))
+
+whose forward value is the exact full-set sum and whose backward is
+``scale * d(value_H)``.  The complement ("H-bar") forward runs under
+``stop_gradient``-ed parameters inside ``lax.map`` so that peak live
+activations are bounded by one chunk — this is what makes LITE a *memory*
+optimization rather than a notational one.
+
+All public entry points operate on arbitrary pytrees of encodings so they can
+aggregate anything a meta-learner pools: deep-set embeddings, backbone
+features, per-class segment sums, inner-loop gradients (MAML, Eq. 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.tree import tree_stop_gradient
+
+PyTree = Any
+EncodeFn = Callable[[PyTree, PyTree], PyTree]  # (params, batched_inputs) -> per-example encodings
+
+
+@dataclasses.dataclass(frozen=True)
+class LiteSpec:
+    """Static configuration for one LITE aggregation site.
+
+    Attributes:
+      h: number of support examples to back-propagate (|H| in the paper).
+         ``h >= n`` disables subsampling (exact gradient).
+      chunk_size: batch size for the no-grad complement forward. Bounds
+         activation memory of the H-bar pass. ``None`` -> one chunk.
+      exact: force exact gradients (baseline / eval mode).
+    """
+
+    h: int = 8
+    chunk_size: int | None = None
+    exact: bool = False
+
+    def resolved_h(self, n: int) -> int:
+        return n if self.exact else min(self.h, n)
+
+
+def sample_stratified_indices(key: jax.Array, ys: jnp.ndarray,
+                              num_classes: int, h: int) -> jnp.ndarray:
+    """h indices with >= 1 example per class when h >= num_classes (the
+    guarantee the paper's sub-sampled-task baseline uses, App. D.4 — a
+    class with zero samples would make the naive baseline's class
+    statistics singular).  Random within-class ranks break ties."""
+    n = ys.shape[0]
+    k1, k2 = jax.random.split(key)
+    perm = jax.random.permutation(k1, n)
+    y_p = ys[perm]
+    onehot = jax.nn.one_hot(y_p, num_classes, dtype=jnp.float32)
+    rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1.0,
+                               y_p[:, None], axis=1)[:, 0]
+    score = rank + 0.5 * jax.random.uniform(k2, (n,))
+    order = jnp.argsort(score)
+    return perm[order[:h]]
+
+
+def sample_h_indices(key: jax.Array, n: int, h: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sample H distinct indices uniformly (without replacement) and return
+    (h_idx[h], comp_idx[n-h]).
+
+    Sampling *without* replacement matches the paper's Algorithm 1 line 4 in
+    the regime H <= N and keeps the estimator unbiased (each index has equal
+    marginal inclusion probability H/N, and the N/H rescaling corrects it).
+    """
+    perm = jax.random.permutation(key, n)
+    return perm[:h], perm[h:]
+
+
+def straight_through(full_value: PyTree, grad_value: PyTree, scale) -> PyTree:
+    """forward = full_value ; backward = scale * d(grad_value).
+
+    Leaf-wise:  stop(full) + scale * (grad - stop(grad)).
+    """
+
+    def _one(f, g):
+        return jax.lax.stop_gradient(f) + scale * (g - jax.lax.stop_gradient(g))
+
+    return jax.tree.map(_one, full_value, grad_value)
+
+
+def _chunked_nograd_sum(encode_fn: EncodeFn, frozen_params: PyTree, xs: PyTree,
+                        chunk_size: int | None) -> PyTree:
+    """Sum of per-example encodings over xs, computed under stop-gradient'ed
+    parameters, in sequential chunks via ``lax.map`` (so only one chunk's
+    activations are ever live)."""
+    leaves = jax.tree.leaves(xs)
+    n = leaves[0].shape[0]
+    if n == 0:
+        raise ValueError("empty complement — use exact mode instead")
+    xs = tree_stop_gradient(xs)
+    if chunk_size is None or chunk_size >= n:
+        enc = encode_fn(frozen_params, xs)
+        return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
+
+    # Pad to a multiple of chunk_size; padded tail is masked out of the sum.
+    num_chunks = -(-n // chunk_size)
+    pad = num_chunks * chunk_size - n
+
+    def _pad(a):
+        cfg = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+        return jnp.pad(a, cfg)
+
+    xs_p = jax.tree.map(_pad, xs)
+    mask = (jnp.arange(num_chunks * chunk_size) < n).astype(jnp.float32)
+    mask = mask.reshape(num_chunks, chunk_size)
+
+    def _reshape(a):
+        return a.reshape((num_chunks, chunk_size) + a.shape[1:])
+
+    xs_c = jax.tree.map(_reshape, xs_p)
+
+    def _one_chunk(args):
+        chunk, m = args
+        enc = encode_fn(frozen_params, chunk)
+        return jax.tree.map(
+            lambda e: jnp.sum(e * m.reshape((-1,) + (1,) * (e.ndim - 1)).astype(e.dtype), axis=0),
+            enc,
+        )
+
+    partials = jax.lax.map(_one_chunk, (xs_c, mask))
+    return jax.tree.map(lambda p: jnp.sum(p, axis=0), partials)
+
+
+def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
+             spec: LiteSpec) -> PyTree:
+    """LITE estimator of ``sum_n encode_fn(params, x_n)`` (paper Eq. 8).
+
+    Forward value: exact sum over all N examples.
+    Backward: (N/H) * d/dparams [ sum over the H sampled examples ].
+
+    Args:
+      encode_fn: maps (params, batched inputs) -> per-example encodings
+        (any pytree whose leaves have a leading example axis).
+      params: differentiable parameters.
+      xs: pytree of support inputs, leading axis N on every leaf.
+      key: PRNG key for the H subset draw.
+      spec: LiteSpec.
+
+    Returns:
+      Pytree of summed encodings (leading axis reduced).
+    """
+    n = jax.tree.leaves(xs)[0].shape[0]
+    h = spec.resolved_h(n)
+    if spec.exact or h >= n:
+        enc = encode_fn(params, xs)
+        return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
+
+    h_idx, comp_idx = sample_h_indices(key, n, h)
+    take = lambda a, i: jnp.take(a, i, axis=0)
+    xs_h = jax.tree.map(partial(take, i=h_idx), xs)
+    xs_c = jax.tree.map(partial(take, i=comp_idx), xs)
+
+    # Differentiable pass over H (single batch — |H| is small by construction).
+    enc_h = encode_fn(params, xs_h)
+    sum_h = jax.tree.map(lambda e: jnp.sum(e, axis=0), enc_h)
+
+    # No-grad pass over the complement, chunked.
+    frozen = tree_stop_gradient(params)
+    sum_c = _chunked_nograd_sum(encode_fn, frozen, xs_c, spec.chunk_size)
+
+    full = jax.tree.map(lambda a, b: jax.lax.stop_gradient(a + b), sum_h, sum_c)
+    return straight_through(full, sum_h, n / h)
+
+
+def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
+                     ys: jnp.ndarray, num_classes: int, key: jax.Array,
+                     spec: LiteSpec) -> Tuple[PyTree, jnp.ndarray]:
+    """LITE estimator of per-class sums  S_c = sum_n 1(y_n = c) e(x_n).
+
+    Needed by metric heads (ProtoNets prototypes, Simple CNAPs class
+    means/covariances) and CNAPs' class-pooled classifier generator.  A single
+    global N/H rescale keeps every class-sum unbiased because the H draw is
+    uniform over ALL support indices:  E[sum_{h} 1(y=c) de] = (H/N) * S'_c.
+
+    Returns (class_sums pytree with leading axis C, counts[C] float32).
+    Counts are exact (labels are not subsampled).
+    """
+    n = jax.tree.leaves(xs)[0].shape[0]
+    onehot_all = jax.nn.one_hot(ys, num_classes, dtype=jnp.float32)  # (N, C)
+    counts = jnp.sum(onehot_all, axis=0)  # exact
+
+    def seg_encode(p, batch):
+        inputs, onehot = batch
+        enc = encode_fn(p, inputs)  # leaves (B, ...)
+        return jax.tree.map(
+            lambda e: jnp.einsum("b...,bc->bc...", e.astype(jnp.float32), onehot), enc
+        )
+
+    sums = lite_sum(seg_encode, params, (xs, onehot_all), key, spec)
+    return sums, counts
+
+
+def lite_value_and_grad(loss_fn: Callable, argnums: int = 0):
+    """Convenience: ``jax.value_and_grad`` for losses already built on
+    ``lite_sum``/``lite_segment_sum`` sites.  Exists so call sites read as a
+    single named concept; the estimator itself lives in the combinators."""
+    return jax.value_and_grad(loss_fn, argnums=argnums)
+
+
+# ---------------------------------------------------------------------------
+# Naive baseline the paper compares against (Fig. 4 / Table D.8): training on
+# a sub-sampled *small task* — forward AND backward see only H examples.
+# ---------------------------------------------------------------------------
+
+
+def subsampled_task_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
+                        key: jax.Array, spec: LiteSpec) -> PyTree:
+    """Forward and backward both restricted to the H subset, rescaled by N/H
+    so the *expected forward value* matches the full sum.  Unbiased in value
+    but — unlike LITE — the downstream L'(e) factor is evaluated at a noisy
+    encoding, which is what inflates its gradient RMSE (paper Fig. 4)."""
+    n = jax.tree.leaves(xs)[0].shape[0]
+    h = spec.resolved_h(n)
+    if spec.exact or h >= n:
+        enc = encode_fn(params, xs)
+        return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
+    h_idx, _ = sample_h_indices(key, n, h)
+    xs_h = jax.tree.map(lambda a: jnp.take(a, h_idx, axis=0), xs)
+    enc = encode_fn(params, xs_h)
+    return jax.tree.map(lambda e: (n / h) * jnp.sum(e, axis=0), enc)

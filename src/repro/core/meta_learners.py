@@ -1,0 +1,370 @@
+"""Meta-learners + LITE: ProtoNets, CNAPs, Simple CNAPs, first-order MAML,
+and the FineTuner transfer baseline (paper §3.1 / §5).
+
+All learners are pure functions over explicit param pytrees:
+
+    learner = make_learner(cfg, backbone)
+    params  = learner.init(key)
+    loss, metrics = learner.meta_loss(params, task, key, lite_spec)
+    task_state    = learner.adapt(params, support_x, support_y, key)   # test
+    logits        = learner.predict(params, task_state, query_x)
+
+LITE enters at every support-set aggregation site (the paper's Eqs. 2-5):
+the set-encoder pooling and the class-pooled feature statistics.  The
+N/H backward rescale is baked into the straight-through combinator
+(repro.core.lite), so the optimizer step needs no extra weighting —
+mathematically identical to Algorithm 1's step(phi, N/H).
+
+A key LITE-correctness subtlety: anything task-adapted that feeds the
+support encoder (e.g. CNAPs' FiLM parameters) must be passed through the
+combinator's *params* argument, not captured in a closure — otherwise the
+no-grad complement pass would leak gradients through the closure and the
+estimator would no longer match Eq. 8.  See ``_film_as_params`` below.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.init import lecun_normal
+from repro.common.tree import tree_stop_gradient
+from repro.core.episodic import Task
+from repro.core.film import generate_film_params, init_film_generator
+from repro.core.lite import (LiteSpec, lite_segment_sum, lite_sum,
+                             subsampled_task_sum)
+from repro.core.set_encoder import (SetEncoderConfig, encode_set,
+                                    init_set_encoder)
+from repro.models.backbone import BackboneDef
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MetaLearnerConfig:
+    kind: str = "protonets"      # protonets|cnaps|simple_cnaps|fomaml|finetuner
+    way: int = 5
+    task_dim: int = 64
+    gen_hidden: int = 64
+    head_hidden: int = 64
+    # fomaml / finetuner
+    inner_lr: float = 0.01
+    inner_steps: int = 5
+    freeze_backbone: bool = False      # CNAPs-family default True via make_learner
+    # simple-cnaps covariance regularization epsilon
+    cov_eps: float = 1.0
+    film_init_std: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class MetaLearner:
+    cfg: MetaLearnerConfig
+    backbone: BackboneDef
+    init: Callable[[jax.Array], PyTree]
+    meta_loss: Callable[..., Tuple[jnp.ndarray, Dict]]
+    adapt: Callable[..., PyTree]
+    predict: Callable[[PyTree, PyTree, jnp.ndarray], jnp.ndarray]
+
+
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def _accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+
+
+# ===========================================================================
+# ProtoNets (+ LITE): metric head, all backbone params learned
+# ===========================================================================
+
+def make_protonets(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
+    def init(key):
+        return dict(bb=bb.init(key))
+
+    def _prototypes(params, sx, sy, key, lite: LiteSpec, estimator=lite_segment_sum):
+        def encode(p, x):
+            return bb.features(p, x, None)
+        sums, counts = estimator(encode, params["bb"], sx, sy, cfg.way, key, lite)
+        return sums / jnp.maximum(counts, 1.0)[:, None]
+
+    def _logits(params, protos, qx):
+        qf = bb.features(params["bb"], qx, None).astype(jnp.float32)
+        d2 = jnp.sum((qf[:, None, :] - protos[None, :, :]) ** 2, axis=-1)
+        return -d2
+
+    def meta_loss(params, task: Task, key, lite: LiteSpec, estimator=None):
+        seg = _sub_seg if estimator == "subsampled" else lite_segment_sum
+        protos = _prototypes(params, task.support_x, task.support_y, key,
+                             lite, seg)
+        logits = _logits(params, protos, task.query_x)
+        loss = _xent(logits, task.query_y)
+        return loss, dict(accuracy=_accuracy(logits, task.query_y))
+
+    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
+        key = jax.random.key(0) if key is None else key
+        return _prototypes(params, sx, sy, key, lite)
+
+    def predict(params, task_state, qx):
+        return _logits(params, task_state, qx)
+
+    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict)
+
+
+# ===========================================================================
+# CNAPs / Simple CNAPs (+ LITE): amortization; frozen backbone + FiLM
+# ===========================================================================
+
+def _film_as_params(bb: BackboneDef, bb_params, film):
+    """Bundle (frozen backbone params, live FiLM tensors) into the pytree
+    LITE treats as differentiable state, so the complement pass stops
+    gradients through FiLM as required by Eq. 8."""
+    return (tree_stop_gradient(bb_params), film)
+
+
+def _make_cnaps_family(cfg: MetaLearnerConfig, bb: BackboneDef,
+                       set_cfg: SetEncoderConfig, simple: bool) -> MetaLearner:
+    fdim = bb.feature_dim
+
+    def init(key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = dict(
+            bb=bb.init(k1),
+            enc=init_set_encoder(k2, set_cfg),
+            film_gen=init_film_generator(k3, set_cfg.task_dim,
+                                         bb.film_sites, cfg.gen_hidden,
+                                         out_std=cfg.film_init_std),
+        )
+        if not simple:   # CNAPs: classifier-weight generator MLP
+            ka, kb = jax.random.split(k4)
+            p["head_gen"] = dict(
+                w1=lecun_normal(ka, (fdim, cfg.head_hidden)),
+                b1=jnp.zeros((cfg.head_hidden,)),
+                w2=lecun_normal(kb, (cfg.head_hidden, fdim + 1)),
+                b2=jnp.zeros((fdim + 1,)),
+            )
+        return p
+
+    def _task_embedding(params, sx, key, lite: LiteSpec, estimator=lite_sum):
+        n = sx.shape[0]
+
+        def enc(p, x):
+            return encode_set(p, x, set_cfg)
+
+        z_sum = estimator(enc, params["enc"], sx, key, lite)
+        return z_sum / n
+
+    def _class_stats(params, film, sx, sy, key, lite: LiteSpec,
+                     estimator=lite_segment_sum):
+        def encode(pf, x):
+            bbp, f = pf
+            feat = bb.features(bbp, x, f).astype(jnp.float32)
+            if simple:
+                outer = jnp.einsum("bi,bj->bij", feat, feat)
+                return dict(feat=feat, outer=outer)
+            return dict(feat=feat)
+
+        pf = _film_as_params(bb, params["bb"], film)
+        sums, counts = estimator(encode, pf, sx, sy, cfg.way, key, lite)
+        return sums, counts
+
+    def _configure(params, sx, sy, key, lite: LiteSpec,
+                   sum_estimator=lite_sum, seg_estimator=lite_segment_sum):
+        """Support set -> task_state (film + head statistics)."""
+        z = _task_embedding(params, sx, key, lite, sum_estimator)
+        film = generate_film_params(params["film_gen"], z)
+        sums, counts = _class_stats(params, film, sx, sy, key, lite,
+                                    seg_estimator)
+        k_c = jnp.maximum(counts, 1.0)
+        mu = sums["feat"] / k_c[:, None]                       # (C, F)
+        state = dict(film=film, mu=mu)
+        if simple:
+            # Simple CNAPs Mahalanobis statistics (paper Eq. in §3.1):
+            # Sigma_c = l_c * S_c + (1 - l_c) * S_task + eps*I, l_c = k/(k+1)
+            ex2 = sums["outer"] / k_c[:, None, None]
+            cov_c = ex2 - jnp.einsum("ci,cj->cij", mu, mu)
+            n_tot = jnp.maximum(jnp.sum(counts), 1.0)
+            mu_t = jnp.sum(sums["feat"], 0) / n_tot
+            ex2_t = jnp.sum(sums["outer"], 0) / n_tot
+            cov_t = ex2_t - jnp.outer(mu_t, mu_t)
+            lam = (k_c / (k_c + 1.0))[:, None, None]
+            sigma = lam * cov_c + (1.0 - lam) * cov_t[None]
+            # scale-aware ridge: cov_eps plus a fraction of the mean
+            # diagonal, so f32 cancellation in E[xx^T] - mu mu^T can never
+            # push eigenvalues below the jitter (cholesky would NaN).
+            diag_mean = jnp.mean(jax.vmap(jnp.diag)(sigma), axis=-1)
+            eps = cfg.cov_eps + 1e-3 * jnp.maximum(diag_mean, 0.0)
+            sigma = sigma + eps[:, None, None] * jnp.eye(fdim)[None]
+            state["chol"] = jax.vmap(jnp.linalg.cholesky)(sigma)
+        else:
+            h = jax.nn.relu(mu @ params["head_gen"]["w1"] + params["head_gen"]["b1"])
+            wb = h @ params["head_gen"]["w2"] + params["head_gen"]["b2"]
+            state["w"] = wb[:, :fdim]                          # (C, F)
+            state["b"] = wb[:, fdim]
+        return state
+
+    def _logits(params, state, qx):
+        qf = bb.features(tree_stop_gradient(params["bb"]), qx,
+                         state["film"]).astype(jnp.float32)
+        if simple:
+            diff = qf[:, None, :] - state["mu"][None, :, :]    # (B, C, F)
+            sol = jax.vmap(
+                lambda L, d: jax.scipy.linalg.cho_solve((L, True), d.T).T,
+                in_axes=(0, 1), out_axes=1)(state["chol"], diff)
+            d2 = jnp.sum(diff * sol, axis=-1)
+            return -d2
+        return qf @ state["w"].T + state["b"]
+
+    def meta_loss(params, task: Task, key, lite: LiteSpec, estimator=None):
+        sum_est = _sub_sum if estimator == "subsampled" else lite_sum
+        seg_est = _sub_seg if estimator == "subsampled" else lite_segment_sum
+        state = _configure(params, task.support_x, task.support_y, key, lite,
+                           sum_est, seg_est)
+        logits = _logits(params, state, task.query_x)
+        loss = _xent(logits, task.query_y)
+        return loss, dict(accuracy=_accuracy(logits, task.query_y))
+
+    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
+        key = jax.random.key(0) if key is None else key
+        return _configure(params, sx, sy, key, lite)
+
+    def predict(params, task_state, qx):
+        return _logits(params, task_state, qx)
+
+    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict)
+
+
+# naive small-task estimators (paper's Fig-4 baseline) with matching signatures
+def _sub_sum(encode_fn, params, xs, key, spec):
+    return subsampled_task_sum(encode_fn, params, xs, key, spec)
+
+
+def _sub_seg(encode_fn, params, xs, ys, num_classes, key, spec):
+    """Naive small-task baseline with class-stratified subsampling (paper
+    App. D.4 guarantees >=1 example/class so class statistics stay
+    finite).  Forward AND backward see only the subset."""
+    from repro.core.lite import sample_stratified_indices
+    n = jax.tree.leaves(xs)[0].shape[0]
+    h = spec.resolved_h(n)
+    if spec.exact or h >= n:
+        idx = jnp.arange(n)
+        scale = 1.0
+    else:
+        idx = sample_stratified_indices(key, ys, num_classes, h)
+        scale = n / h
+    take = lambda a: jnp.take(a, idx, axis=0)
+    xs_h = jax.tree.map(take, xs)
+    onehot_h = jax.nn.one_hot(ys[idx], num_classes, dtype=jnp.float32)
+    enc = encode_fn(params, xs_h)
+    sums = jax.tree.map(
+        lambda e: scale * jnp.einsum("b...,bc->c...",
+                                     e.astype(jnp.float32), onehot_h), enc)
+    counts = jnp.sum(jax.nn.one_hot(ys, num_classes, dtype=jnp.float32), axis=0)
+    return sums, counts
+
+
+# ===========================================================================
+# First-order MAML (paper baseline; batched, no LITE needed)
+# ===========================================================================
+
+def make_fomaml(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
+    fdim = bb.feature_dim
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return dict(bb=bb.init(k1),
+                    head=dict(w=lecun_normal(k2, (fdim, cfg.way)),
+                              b=jnp.zeros((cfg.way,))))
+
+    def _logits_p(p, x):
+        f = bb.features(p["bb"], x, None).astype(jnp.float32)
+        return f @ p["head"]["w"] + p["head"]["b"]
+
+    def _inner_adapt(params, sx, sy):
+        def inner_loss(p):
+            return _xent(_logits_p(p, sx), sy)
+
+        p = params
+        for _ in range(cfg.inner_steps):
+            g = jax.grad(inner_loss)(p)
+            p = jax.tree.map(lambda a, b: a - cfg.inner_lr * b, p, g)
+        return p
+
+    def meta_loss(params, task: Task, key, lite: LiteSpec, estimator=None):
+        del key, lite, estimator
+        adapted = _inner_adapt(params, task.support_x, task.support_y)
+        # first-order: treat the adapted point as a constant offset
+        adapted = jax.tree.map(
+            lambda a, b: a + jax.lax.stop_gradient(b - a), params, adapted)
+        logits = _logits_p(adapted, task.query_x)
+        loss = _xent(logits, task.query_y)
+        return loss, dict(accuracy=_accuracy(logits, task.query_y))
+
+    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
+        return _inner_adapt(params, sx, sy)
+
+    def predict(params, task_state, qx):
+        return _logits_p(task_state, qx)
+
+    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict)
+
+
+# ===========================================================================
+# FineTuner transfer baseline (frozen backbone, linear head, K steps)
+# ===========================================================================
+
+def make_finetuner(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
+    fdim = bb.feature_dim
+
+    def init(key):
+        return dict(bb=bb.init(key))
+
+    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
+        feats = bb.features(tree_stop_gradient(params["bb"]), sx, None)
+        feats = jax.lax.stop_gradient(feats).astype(jnp.float32)
+        head = dict(w=jnp.zeros((fdim, cfg.way)), b=jnp.zeros((cfg.way,)))
+
+        def loss(h):
+            logits = feats @ h["w"] + h["b"]
+            return _xent(logits, sy)
+
+        def body(h, _):
+            g = jax.grad(loss)(h)
+            return jax.tree.map(lambda a, b: a - cfg.inner_lr * b, h, g), None
+
+        head, _ = jax.lax.scan(body, head, None, length=cfg.inner_steps)
+        return head
+
+    def predict(params, head, qx):
+        qf = bb.features(params["bb"], qx, None).astype(jnp.float32)
+        return qf @ head["w"] + head["b"]
+
+    def meta_loss(params, task: Task, key, lite: LiteSpec, estimator=None):
+        head = adapt(params, task.support_x, task.support_y)
+        logits = predict(params, head, task.query_x)
+        return _xent(logits, task.query_y), dict(
+            accuracy=_accuracy(logits, task.query_y))
+
+    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict)
+
+
+# ===========================================================================
+# factory
+# ===========================================================================
+
+def make_learner(cfg: MetaLearnerConfig, bb: BackboneDef,
+                 set_cfg: Optional[SetEncoderConfig] = None) -> MetaLearner:
+    if cfg.kind == "protonets":
+        return make_protonets(cfg, bb)
+    if cfg.kind in ("cnaps", "simple_cnaps"):
+        if set_cfg is None:
+            raise ValueError("CNAPs-family learners need a SetEncoderConfig")
+        return _make_cnaps_family(cfg, bb, set_cfg, simple=cfg.kind == "simple_cnaps")
+    if cfg.kind == "fomaml":
+        return make_fomaml(cfg, bb)
+    if cfg.kind == "finetuner":
+        return make_finetuner(cfg, bb)
+    raise ValueError(f"unknown meta-learner kind: {cfg.kind}")

@@ -1,0 +1,89 @@
+"""Synthetic episodic task generators (ORBIT / VTAB+MD stand-ins — the
+real datasets are unavailable offline; DESIGN.md §8 records this).
+
+Image tasks: each class is a Gaussian blob in pixel space with a class-
+specific low-frequency pattern — linearly separable enough that accuracy
+trends (flat-in-|H|, LITE > subsampled-task) are measurable in minutes on
+CPU, yet non-trivial for a conv net from scratch.
+
+Token tasks: each class is a distinct unigram distribution over the vocab;
+sequences sample iid from it.  Used by the episodic-LM integration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.episodic import Task
+
+
+@dataclasses.dataclass(frozen=True)
+class EpisodicImageConfig:
+    way: int = 5
+    shot: int = 10                   # support examples per class
+    query_per_class: int = 10
+    image_size: int = 32
+    channels: int = 3
+    class_sep: float = 0.5           # distance between class means
+    noise: float = 1.5
+
+
+def sample_image_task(key: jax.Array, cfg: EpisodicImageConfig) -> Task:
+    km, ks, kq, kp = jax.random.split(key, 4)
+    h = w = cfg.image_size
+    # class prototype pattern: low-freq random image per class
+    base = jax.random.normal(kp, (cfg.way, h // 4, w // 4, cfg.channels))
+    base = jax.image.resize(base, (cfg.way, h, w, cfg.channels), "linear")
+    base = cfg.class_sep * base / jnp.sqrt(jnp.mean(base ** 2) + 1e-8)
+
+    def draw(k, per_class):
+        noise = cfg.noise * jax.random.normal(
+            k, (cfg.way, per_class, h, w, cfg.channels))
+        x = base[:, None] + noise
+        y = jnp.repeat(jnp.arange(cfg.way), per_class)
+        return x.reshape(-1, h, w, cfg.channels), y
+
+    sx, sy = draw(ks, cfg.shot)
+    qx, qy = draw(kq, cfg.query_per_class)
+    perm = jax.random.permutation(km, sx.shape[0])
+    return Task(support_x=sx[perm], support_y=sy[perm],
+                query_x=qx, query_y=qy, way=cfg.way)
+
+
+def image_task_stream(key: jax.Array, cfg: EpisodicImageConfig) -> Iterator[Task]:
+    while True:
+        key, sub = jax.random.split(key)
+        yield sample_image_task(sub, cfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class EpisodicTokenConfig:
+    way: int = 5
+    shot: int = 8
+    query_per_class: int = 8
+    seq_len: int = 64
+    vocab: int = 256
+    concentration: float = 0.3       # lower = more distinct class unigrams
+
+
+def sample_token_task(key: jax.Array, cfg: EpisodicTokenConfig) -> Task:
+    kd, ks, kq, km = jax.random.split(key, 4)
+    logits = jax.random.normal(kd, (cfg.way, cfg.vocab)) / cfg.concentration
+
+    def draw(k, per_class):
+        keys = jax.random.split(k, cfg.way)
+        xs = jnp.stack([
+            jax.random.categorical(kk, logits[c], shape=(per_class, cfg.seq_len))
+            for c, kk in enumerate(keys)])
+        y = jnp.repeat(jnp.arange(cfg.way), per_class)
+        return xs.reshape(-1, cfg.seq_len).astype(jnp.int32), y
+
+    sx, sy = draw(ks, cfg.shot)
+    qx, qy = draw(kq, cfg.query_per_class)
+    perm = jax.random.permutation(km, sx.shape[0])
+    return Task(support_x=sx[perm], support_y=sy[perm],
+                query_x=qx, query_y=qy, way=cfg.way)

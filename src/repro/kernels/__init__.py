@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships three layers:
+  <name>.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py     jit'd public wrappers (interpret=True off-TPU)
+  ref.py     pure-jnp oracles (the allclose ground truth in tests)
+
+Kernels: flash_attention (causal/window/softcap online-softmax),
+mahalanobis (Simple CNAPs head), segment_pool (LITE's aggregation site as
+a one-hot MXU matmul), ssd_scan (Mamba-2 intra-chunk), gmm (per-expert
+grouped GEMM for the MoE dispatch).
+"""

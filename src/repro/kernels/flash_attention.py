@@ -1,0 +1,123 @@
+"""Pallas TPU flash attention (block-tiled online softmax).
+
+TPU-native adaptation of the memory-efficient attention idea: q tiles are
+VMEM-resident and MXU-aligned (block_q x head_dim, multiples of 128 at
+production shapes); the k/v sequence streams through the LAST grid axis
+('arbitrary' semantics -> sequential revisits of the same output block),
+with the running max / denominator kept in VMEM scratch between visits.
+Supports the pool's attention variants: causal, sliding-window (gemma2
+local layers), and logit softcap.
+
+Validated on CPU in interpret mode against ref.attention_ref; the TPU
+path is identical code through pl.pallas_call.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            block_q: int, block_k: int, causal: bool,
+            window: Optional[int], softcap: Optional[float], scale: float,
+            seq_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0].astype(jnp.float32)                    # (bk, d)
+
+    # zero sequence-padding rows of k/v: OOB block padding may be NaN and
+    # 0 * NaN inside the dots would poison valid rows
+    kv_valid = (ki * block_k +
+                jax.lax.broadcasted_iota(jnp.int32, (k.shape[0], 1), 0)) < seq_len
+    k = jnp.where(kv_valid, k, 0.0)
+    v = jnp.where(kv_valid, v, 0.0)
+    q = jnp.where(jnp.isfinite(q), q, 0.0)              # q padding rows
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # explicit zero under the mask: padded k/v blocks may contain NaN and
+    # 0 * NaN would poison the accumulator
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = corr * acc_scr[...] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    # written every visit (last one wins) — avoids relying on output-buffer
+    # persistence semantics across revisits
+    o_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q, k, v: (BH, S, D) — batch*heads flattened (GQA groups expanded by
+    the ops wrapper).  Returns (BH, S, D)."""
+    bh, s, d = q.shape
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    nq = pl.cdiv(s, block_q)
+    nk = pl.cdiv(s, block_k)
+    scale = d ** -0.5
+
+    kern = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k, causal=causal,
+        window=window, softcap=softcap, scale=scale, seq_len=s)
+
+    return pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

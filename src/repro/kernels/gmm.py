@@ -1,0 +1,60 @@
+"""Pallas TPU grouped matmul (per-expert GEMM) for the MoE dispatch path:
+
+    out[e] = x[e] @ w[e]        x: (E, C, D), w: (E, D, F)
+
+One expert's (block_c x block_d) x (block_d x block_f) tiles per grid
+cell, accumulating over the D axis in VMEM scratch — the megablox-style
+building block behind the dropless MoE layer (repro.models.moe runs the
+jnp einsum on the dry-run path; this kernel is the TPU hot-spot form).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    di = pl.program_id(3)
+    nd = pl.num_programs(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                   # (bc, bd)
+    w = w_ref[0]                                   # (bd, bf)
+    acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(di == nd - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gmm(x: jnp.ndarray, w: jnp.ndarray, *, block_c: int = 128,
+        block_d: int = 512, block_f: int = 256,
+        interpret: bool = False) -> jnp.ndarray:
+    """x: (E, C, D) bf16/f32; w: (E, D, F) -> (E, C, F) in x.dtype."""
+    e, c, d = x.shape
+    f = w.shape[-1]
+    block_c = min(block_c, c)
+    block_d = min(block_d, d)
+    block_f = min(block_f, f)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(e, pl.cdiv(c, block_c), pl.cdiv(f, block_f), pl.cdiv(d, block_d)),
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d), lambda ei, ci, fi, di: (ei, ci, di)),
+            pl.BlockSpec((1, block_d, block_f), lambda ei, ci, fi, di: (ei, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda ei, ci, fi, di: (ei, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,48 @@
+"""Pallas TPU kernel for Simple CNAPs' Mahalanobis head (paper §3.1):
+
+    d2[b, c] = (x_b - mu_c)^T Sinv_c (x_b - mu_c)
+
+The per-class inverse covariance (F, F) tile and the query tile (block_b,
+F) are VMEM-resident; the quadratic form runs as two MXU matmuls per
+(class, query-block) grid cell.  F is the backbone feature width (64-512
+across configs) so a full (F, F) tile fits VMEM comfortably.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(q_ref, mu_ref, sinv_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)            # (bb, F)
+    mu = mu_ref[0].astype(jnp.float32)            # (F,)
+    sinv = sinv_ref[0].astype(jnp.float32)        # (F, F)
+    diff = q - mu[None, :]
+    t = jax.lax.dot(diff, sinv, preferred_element_type=jnp.float32)
+    o_ref[:, 0] = jnp.sum(t * diff, axis=1)
+
+
+def mahalanobis(q: jnp.ndarray, mu: jnp.ndarray, sinv: jnp.ndarray, *,
+                block_b: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """q: (B, F); mu: (C, F); sinv: (C, F, F) -> (B, C) squared distances."""
+    b, f = q.shape
+    c = mu.shape[0]
+    block_b = min(block_b, b)
+    nb = pl.cdiv(b, block_b)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(c, nb),
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda ci, bi: (bi, 0)),
+            pl.BlockSpec((1, f), lambda ci, bi: (ci, 0)),
+            pl.BlockSpec((1, f, f), lambda ci, bi: (ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda ci, bi: (bi, ci)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=interpret,
+    )(q, mu, sinv)

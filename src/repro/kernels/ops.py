@@ -1,0 +1,71 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On non-TPU backends the kernels execute in interpret mode (Python
+evaluation of the kernel body — bit-faithful semantics, no Mosaic); on
+TPU the same code lowers to Mosaic.  Model code opts in via
+``use_pallas_kernels`` config; the XLA/jnp path (ref semantics) is what
+the SPMD dry-run lowers, so roofline FLOPs stay visible to the HLO
+analyzer either way.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gmm as _gmm
+from repro.kernels import mahalanobis as _md
+from repro.kernels import segment_pool as _sp
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None):
+    """q, k, v: (BH, S, D)."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, interpret=_interpret())
+
+
+def flash_attention_gqa(q, k, v, **kw):
+    """q: (B, S, Hq, D); k/v: (B, S, Hkv, D) — GQA via group expansion."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    o = flash_attention(fold(q), fold(k), fold(v), **kw)
+    return o.reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+
+
+@jax.jit
+def mahalanobis(q, mu, sinv):
+    """q: (B, F); mu: (C, F); sinv: (C, F, F) -> (B, C)."""
+    return _md.mahalanobis(q, mu, sinv, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes",))
+def segment_pool(x, labels, num_classes: int):
+    """x: (B, F); labels: (B,) -> (sums (C, F), counts (C,))."""
+    return _sp.segment_pool(x, labels, num_classes, interpret=_interpret())
+
+
+@jax.jit
+def gmm(x, w):
+    """Grouped per-expert matmul: (E, C, D) @ (E, D, F) -> (E, C, F)."""
+    return _gmm.gmm(x, w, interpret=_interpret())
+
+
+@jax.jit
+def ssd_chunk(x, dt, A, B, C):
+    """Intra-chunk SSD (see repro.kernels.ssd_scan)."""
+    return _ssd.ssd_chunk(x, dt, A, B, C, interpret=_interpret())

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every kernel in this package (the ground truth the
+shape/dtype sweeps in tests/test_kernels.py assert against)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None):
+    """q,k,v: (BH, S, D)."""
+    s = q.shape[1]
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def mahalanobis_ref(q, mu, sinv):
+    """q: (B, F); mu: (C, F); sinv: (C, F, F) -> d2 (B, C)."""
+    diff = q[:, None, :].astype(jnp.float32) - mu[None].astype(jnp.float32)
+    return jnp.einsum("bcf,cfg,bcg->bc", diff, sinv.astype(jnp.float32), diff)
+
+
+def segment_pool_ref(x, labels, num_classes):
+    """x: (B, F); labels: (B,) -> (sums (C, F), counts (C,))."""
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    sums = jnp.einsum("bc,bf->cf", onehot, x.astype(jnp.float32))
+    return sums, jnp.sum(onehot, axis=0)
+
+
+def ssd_chunk_ref(x, dt, A, B, C):
+    """Intra-chunk SSD terms for ONE chunk (the Pallas kernel's unit).
+
+    x: (Q, H, P); dt: (Q, H); A: (H,); B, C: (Q, H, N)
+    Returns (y_diag (Q, H, P), state (H, P, N), chunk_decay (H,),
+             state_decay (Q, H)) — everything the inter-chunk jnp
+    recurrence needs.
+    """
+    f32 = jnp.float32
+    x, dt, A, B, C = (t.astype(f32) for t in (x, dt, A, B, C))
+    dA = dt * A[None, :]                          # (Q, H)
+    dA_cum = jnp.cumsum(dA, axis=0)
+    q = x.shape[0]
+    seg = dA_cum[:, None, :] - dA_cum[None, :, :]  # (Q, Q, H) l - s
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    L = jnp.where(mask[..., None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("lhn,shn->lsh", C, B)
+    y_diag = jnp.einsum("lsh,sh,shp->lhp", CB * L, dt, x)
+    decay_states = jnp.exp(dA_cum[-1:, :] - dA_cum)          # (Q, H)
+    state = jnp.einsum("qhn,qh,qhp->hpn", B, decay_states * dt, x)
+    return y_diag, state, jnp.exp(dA_cum[-1]), jnp.exp(dA_cum)
+
+
+def gmm_ref(x, w):
+    """Grouped (per-expert) matmul: x (E, C, D), w (E, D, F) -> (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel for class-prototype / deep-set segment pooling:
+
+    sums[c, f] = sum_b 1(y_b == c) x[b, f]
+
+On TPU a scatter is serialized; the one-hot MATMUL form keeps it on the
+MXU ((C, B_t) x (B_t, F_t) per tile, accumulated over the B grid axis).
+This is the aggregation LITE subsamples (ProtoNets prototypes, CNAPs
+class pooling, set-encoder sums).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(onehot_ref, x_ref, o_ref, *, block_b: int, n_rows: int):
+    bi = pl.program_id(1)
+
+    @pl.when(bi == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    oh = onehot_ref[...].astype(jnp.float32)          # (bb, C)
+    x = x_ref[...].astype(jnp.float32)                # (bb, Ft)
+    # zero OOB padding rows (may be NaN) — 0*NaN would poison the dot
+    valid = (bi * block_b +
+             jax.lax.broadcasted_iota(jnp.int32, (oh.shape[0], 1), 0)) < n_rows
+    oh = jnp.where(valid, oh, 0.0)
+    x = jnp.where(valid, x, 0.0)
+    o_ref[...] += jax.lax.dot_general(
+        oh, x, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def segment_pool(x: jnp.ndarray, labels: jnp.ndarray, num_classes: int, *,
+                 block_b: int = 128, block_f: int = 256,
+                 interpret: bool = False):
+    """x: (B, F); labels: (B,) int32 -> (sums (C, F) f32, counts (C,) f32)."""
+    import functools
+    b, f = x.shape
+    block_b = min(block_b, b)
+    block_f = min(block_f, f)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    sums = pl.pallas_call(
+        functools.partial(_kernel, block_b=block_b, n_rows=b),
+        grid=(pl.cdiv(f, block_f), pl.cdiv(b, block_b)),
+        in_specs=[
+            pl.BlockSpec((block_b, num_classes), lambda fi, bi: (bi, 0)),
+            pl.BlockSpec((block_b, block_f), lambda fi, bi: (bi, fi)),
+        ],
+        out_specs=pl.BlockSpec((num_classes, block_f), lambda fi, bi: (0, fi)),
+        out_shape=jax.ShapeDtypeStruct((num_classes, f), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(onehot, x)
+    return sums, jnp.sum(onehot, axis=0)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk computation.
+
+Per (batch*head, chunk) grid cell, with the chunk's (Q, P) inputs and
+(Q, N) B/C projections VMEM-resident, computes the dense (MXU) part of
+SSD:
+
+    y_diag = (C B^T o L) diag(dt) X          (Q x Q semiseparable matmul)
+    state  = B^T diag(decay * dt) X          (chunk's contribution)
+
+The O(n_chunks) inter-chunk recurrence (tiny (P, N) states) stays in jnp
+(``repro.models.mamba2.ssd_chunked``) — it is sequential and bandwidth-
+trivial; the FLOPs live here.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, cd_ref, sd_ref):
+    f32 = jnp.float32
+    x = x_ref[0].astype(f32)          # (Q, P)
+    dt = dt_ref[0].astype(f32)        # (Q, 1) -> (Q,)
+    a = a_ref[0, 0]                   # scalar A for this head
+    b = b_ref[0].astype(f32)          # (Q, N)
+    c = c_ref[0].astype(f32)          # (Q, N)
+    q = x.shape[0]
+
+    dtv = dt[:, 0]
+    dA = dtv * a                      # (Q,)
+    dA_cum = jnp.cumsum(dA)
+    seg = dA_cum[:, None] - dA_cum[None, :]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >=
+            jax.lax.broadcasted_iota(jnp.int32, (q, q), 1))
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=f32)      # (Q, Q)
+    y = jax.lax.dot(cb * L * dtv[None, :], x,
+                    preferred_element_type=f32)               # (Q, P)
+    decay = jnp.exp(dA_cum[-1] - dA_cum)                       # (Q,)
+    st = jax.lax.dot_general(b, x * (decay * dtv)[:, None],
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=f32)      # (N, P)
+
+    y_ref[0] = y.astype(y_ref.dtype)
+    st_ref[0] = jnp.transpose(st).astype(st_ref.dtype)         # (P, N)
+    cd_ref[0, 0] = jnp.exp(dA_cum[-1])
+    sd_ref[0] = jnp.exp(dA_cum)[:, None].astype(sd_ref.dtype)
+
+
+def ssd_chunk(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+              B: jnp.ndarray, C: jnp.ndarray, *, interpret: bool = False):
+    """Batched intra-chunk SSD.
+
+    x: (G, Q, P); dt: (G, Q); A: (G,); B, C: (G, Q, N) where G = batch *
+    heads * n_chunks flattened by the ops wrapper.
+    Returns (y_diag (G, Q, P), states (G, P, N), chunk_decay (G,),
+             state_decay (G, Q)).
+    """
+    g, q, p = x.shape
+    n = B.shape[-1]
+    dt2 = dt[..., None]                                       # (G, Q, 1)
+    a2 = A[:, None]                                           # (G, 1)
+
+    y, st, cd, sd = pl.pallas_call(
+        _kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, 1), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, p, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, q, 1), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((g, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((g, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((g, q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt2, a2, B, C)
+    return y, st, cd[:, 0], sd[..., 0]

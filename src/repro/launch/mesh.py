@@ -1,0 +1,29 @@
+"""Mesh builders.  Functions, not module constants — importing this module
+never touches jax device state.
+
+Production topology (TPU v5e): 256 chips/pod as a 16x16 (data, model) ICI
+mesh; multi-pod adds a leading 'pod' DCN axis.  ``pods`` generalizes to any
+pod count (the 1000+-node deployment is `pods=N` with the same rules; the
+dry-run exercises N=2).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, pods: int = 2):
+    shape = (pods, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices_shape, axes):
+    """Elastic helper: build a mesh for an arbitrary live-device topology
+    (used by the elastic re-mesh path and tests)."""
+    return jax.make_mesh(tuple(devices_shape), tuple(axes))
+
+
+def make_test_mesh():
+    """Whatever devices exist (usually 1 CPU) as a (data, model)=(n, 1) mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

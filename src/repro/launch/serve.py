@@ -1,0 +1,61 @@
+"""Production serving launcher: continuous-batching decode over the
+uniform cache API.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b \
+        --requests 8 --slots 4 --max-new 16
+
+Runs the smoke config on this container; on a TPU slice the same engine
+serves the full config (params sharded by repro.sharding.rules — see
+EXPERIMENTS.md §Perf cell 2 for the topology guidance: size the slice so
+weights are resident, don't decode one stream set on a full pod).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_smoke_config
+from repro.models.registry import get_api
+from repro.serve.engine import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="minitron-4b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    api = get_api(cfg)
+    params = api.init(jax.random.key(0), cfg)
+    engine = ServeEngine(cfg, params, n_slots=args.slots,
+                         max_seq=args.prompt_len + args.max_new + 8)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        size=args.prompt_len).astype(np.int32),
+                    max_new_tokens=args.max_new,
+                    temperature=args.temperature)
+            for i in range(args.requests)]
+    t0 = time.time()
+    engine.run_to_completion(reqs)
+    dt = time.time() - t0
+    n_tok = sum(len(r.out_tokens) for r in reqs)
+    print(f"{cfg.name} ({cfg.family} cache): {len(reqs)} requests, "
+          f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s on "
+          f"{len(jax.devices())} {jax.devices()[0].platform} device(s))")
+    for r in reqs[:4]:
+        print(f"  req {r.uid}: {r.prompt.tolist()} -> {r.out_tokens}")
+    assert all(r.done for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's
+zero-allocation batch/state builders (and the shape contract the data
+pipeline and serving engine follow)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES_BY_NAME
+from repro.models.registry import get_api
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs_for(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """Model-input ShapeDtypeStructs for one (arch x shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        batch = dict(tokens=SDS((b, s), jnp.int32))
+        if cfg.frontend == "vision_stub":
+            batch["frontend_embeds"] = SDS((b, cfg.n_frontend_tokens, cfg.d_model), cdt)
+        if cfg.family == "encdec":
+            batch["frontend_embeds"] = SDS((b, cfg.n_frontend_tokens, cfg.d_model), cdt)
+        return batch
+    if shape.kind == "prefill":
+        batch = dict(tokens=SDS((b, s), jnp.int32))
+        if cfg.frontend == "vision_stub":
+            batch["frontend_embeds"] = SDS((b, cfg.n_frontend_tokens, cfg.d_model), cdt)
+        if cfg.family == "encdec":
+            batch["frontend_embeds"] = SDS((b, cfg.n_frontend_tokens, cfg.d_model), cdt)
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    return dict(tokens=SDS((b, 1), jnp.int32))
+
+
+def abstract_cache_for(cfg: ModelConfig, shape: ShapeSpec):
+    api = get_api(cfg)
+    return jax.eval_shape(
+        functools.partial(api.init_cache, cfg, shape.global_batch, shape.seq_len))
+
+
+def abstract_params_for(cfg: ModelConfig):
+    api = get_api(cfg)
+    return jax.eval_shape(functools.partial(api.init, cfg=cfg),
+                          jax.random.key(0))
+
+
+def shape_by_name(name: str) -> ShapeSpec:
+    return SHAPES_BY_NAME[name]

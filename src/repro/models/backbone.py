@@ -1,0 +1,34 @@
+"""Backbone protocol: anything that maps raw inputs to a feature vector and
+exposes FiLM modulation sites can serve as a meta-learner's feature extractor
+(the paper uses ResNet-18 / EfficientNet-B0; here it is also how the assigned
+LM architectures plug into the episodic layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BackboneDef:
+    """A feature extractor usable by the episodic meta-learning layer.
+
+    Attributes:
+      init: key -> params pytree.
+      features: (params, x, film) -> (B, feature_dim) per-example features.
+        `film` is a list of {gamma, beta} dicts, one per modulation site
+        (len == len(film_sites)); pass ``None`` for identity modulation.
+      feature_dim: output feature width.
+      film_sites: channel count at each FiLM site (drives the generator).
+      name: for logging / benchmark tables.
+    """
+
+    init: Callable[[Any], PyTree]
+    features: Callable[[PyTree, jnp.ndarray, Any], jnp.ndarray]
+    feature_dim: int
+    film_sites: Sequence[int]
+    name: str = "backbone"

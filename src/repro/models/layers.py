@@ -1,0 +1,333 @@
+"""Transformer building blocks shared by every LM-family architecture.
+
+Pure-jnp implementations: this is the path the SPMD dry-run lowers (so the
+roofline reads real HLO FLOPs).  The Pallas kernels in ``repro.kernels``
+are drop-in TPU hot-spot replacements validated against these in tests.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.init import lecun_normal
+from repro.configs.base import AttentionConfig, ModelConfig
+
+Params = Dict
+
+
+def _mixed_dot_ok() -> bool:
+    """bf16 x bf16 -> f32 dots: native on TPU/GPU MXUs (and in AOT
+    lowering), but the CPU *runtime* thunk rejects them.  The dry-run sets
+    REPRO_MIXED_DOT=1 (it only compiles); CPU test execution falls back to
+    materialized f32 casts."""
+    import os
+    if os.environ.get("REPRO_MIXED_DOT"):
+        return True
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+def dot_f32(subscripts: str, a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """einsum with f32 accumulation that avoids materializing f32 copies of
+    big bf16 operands wherever the backend allows (see _mixed_dot_ok)."""
+    if a.dtype == jnp.float32 and b.dtype == jnp.float32:
+        return jnp.einsum(subscripts, a, b)
+    if _mixed_dot_ok():
+        return jnp.einsum(subscripts, a, b,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum(subscripts, a.astype(jnp.float32),
+                      b.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# norms / rotary / misc
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------
+# attention core (shared by GQA and MLA after head projection)
+# --------------------------------------------------------------------------
+
+def attention_scores(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     *, causal: bool, window: Optional[jnp.ndarray] = None,
+                     cap: Optional[float] = None,
+                     q_positions: Optional[jnp.ndarray] = None,
+                     k_positions: Optional[jnp.ndarray] = None,
+                     k_len: Optional[jnp.ndarray] = None,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention.
+
+    q: (B, Sq, Hq, Dh);  k/v: (B, Sk, Hkv, Dh) with Hq % Hkv == 0.
+    window: optional traced scalar — sliding-window width (tokens attend to
+      keys with q_pos - k_pos < window). Enables gemma2's per-layer
+      local/global alternation inside one scanned block.
+    k_len: optional traced scalar — number of valid cache entries (decode).
+    Returns (B, Sq, Hq, Dh) in q.dtype; softmax in f32.
+    """
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, dh)
+    if scale is None:
+        scale = dh ** -0.5
+    # bf16 operands, f32 accumulation — an explicit .astype(f32) here would
+    # MATERIALIZE an f32 copy of the whole K cache every decode step
+    # (measured: the dominant decode-memory term)
+    logits = dot_f32("bqkgd,bskd->bkgqs", qg, k) * scale
+    logits = softcap(logits, cap)
+    qpos = jnp.arange(sq) if q_positions is None else q_positions
+    kpos = jnp.arange(sk) if k_positions is None else k_positions
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    if k_len is not None:
+        mask &= kpos[None, :] < k_len
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = dot_f32("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer
+# --------------------------------------------------------------------------
+
+def init_gqa(key: jax.Array, cfg: ModelConfig) -> Params:
+    a = cfg.attention
+    d, hq, hkv, dh = cfg.d_model, a.n_heads, a.n_kv_heads, a.head_dim
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=lecun_normal(ks[0], (d, hq * dh)),
+        wk=lecun_normal(ks[1], (d, hkv * dh)),
+        wv=lecun_normal(ks[2], (d, hkv * dh)),
+        wo=lecun_normal(ks[3], (hq * dh, d)),
+    )
+    if a.qkv_bias:
+        p.update(bq=jnp.zeros((hq * dh,)), bk=jnp.zeros((hkv * dh,)),
+                 bv=jnp.zeros((hkv * dh,)))
+    return p
+
+
+def gqa_project_qkv(p: Params, x: jnp.ndarray, a: AttentionConfig,
+                    positions: jnp.ndarray, head_constraints: bool = False):
+    b, s, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if a.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, a.n_heads, a.head_dim)
+    k = k.reshape(b, s, a.n_kv_heads, a.head_dim)
+    v = v.reshape(b, s, a.n_kv_heads, a.head_dim)
+    if head_constraints:
+        # §Perf: pin sharding to the HEAD axis.  Without this GSPMD splits
+        # head_dim across 'model' and pays a partial-sum all-reduce of the
+        # full (B, H, S, S) logits tensor per layer.  When heads do NOT
+        # divide the axis: replicating is cheap ONLY for true-GQA small
+        # k/v (kv_width << d_model); for MHA-wide k/v (minicpm: 36x64)
+        # a replicate pin costs a full k/v all-gather — skip instead
+        # (measured 32x prefill-collective regression).
+        from repro.sharding.ctx import constrain, P
+        q = constrain(q, P("data", None, "model", None), require_full=True)
+        kv_small = a.n_kv_heads * a.head_dim * 4 <= a.n_heads * a.head_dim
+        k = constrain(k, P("data", None, "model", None),
+                      require_full=not kv_small)
+        v = constrain(v, P("data", None, "model", None),
+                      require_full=not kv_small)
+    q = apply_rope(q, positions, a.rope_theta)
+    k = apply_rope(k, positions, a.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(p: Params, x: jnp.ndarray, a: AttentionConfig, *,
+                  window: Optional[jnp.ndarray] = None,
+                  head_constraints: bool = False) -> jnp.ndarray:
+    """Full-sequence (train / prefill) GQA self-attention."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = gqa_project_qkv(p, x, a, positions,
+                              head_constraints=head_constraints)
+    o = attention_scores(q, k, v, causal=True, window=window, cap=a.attn_softcap)
+    return o.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def gqa_attention_bidir(p: Params, x: jnp.ndarray, a: AttentionConfig) -> jnp.ndarray:
+    """Bidirectional self-attention (whisper encoder)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = gqa_project_qkv(p, x, a, positions)
+    o = attention_scores(q, k, v, causal=False, cap=a.attn_softcap)
+    return o.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLA attention layer (DeepSeek-V2): low-rank latent KV cache
+# --------------------------------------------------------------------------
+
+def init_mla(key: jax.Array, cfg: ModelConfig) -> Params:
+    a = cfg.attention
+    d, h = cfg.d_model, a.n_heads
+    qk = a.qk_nope_dim + a.qk_rope_dim
+    ks = jax.random.split(key, 8)
+    p: Params = dict(
+        # query path (optionally low-rank)
+        wkv_a=lecun_normal(ks[1], (d, a.kv_lora_rank + a.qk_rope_dim)),
+        kv_norm=jnp.zeros((a.kv_lora_rank,)),
+        wk_b=lecun_normal(ks[2], (a.kv_lora_rank, h * a.qk_nope_dim)),
+        wv_b=lecun_normal(ks[3], (a.kv_lora_rank, h * a.v_head_dim)),
+        wo=lecun_normal(ks[4], (h * a.v_head_dim, d)),
+    )
+    if a.q_lora_rank > 0:
+        p["wq_a"] = lecun_normal(ks[5], (d, a.q_lora_rank))
+        p["q_norm"] = jnp.zeros((a.q_lora_rank,))
+        p["wq_b"] = lecun_normal(ks[6], (a.q_lora_rank, h * qk))
+    else:
+        p["wq"] = lecun_normal(ks[0], (d, h * qk))
+    return p
+
+
+def mla_queries(p: Params, x: jnp.ndarray, a: AttentionConfig, eps: float,
+                positions: jnp.ndarray):
+    """Returns (q_nope (B,S,H,nope), q_rope (B,S,H,rope))."""
+    b, s, _ = x.shape
+    if a.q_lora_rank > 0:
+        ql = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_norm"], eps)
+        q = ql @ p["wq_b"].astype(x.dtype)
+    else:
+        q = x @ p["wq"].astype(x.dtype)
+    q = q.reshape(b, s, a.n_heads, a.qk_nope_dim + a.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [a.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, a.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_latent(p: Params, x: jnp.ndarray, a: AttentionConfig, eps: float,
+               positions: jnp.ndarray):
+    """Compress x -> (c_kv (B,S,R) normalized latent, k_rope (B,S,1,rope)).
+    This pair IS the decode-time KV cache (paper: latent cache)."""
+    b, s, _ = x.shape
+    kv = x @ p["wkv_a"].astype(x.dtype)
+    c_kv, k_rope = jnp.split(kv, [a.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], eps)
+    k_rope = apply_rope(k_rope.reshape(b, s, 1, a.qk_rope_dim), positions,
+                        a.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_attention(p: Params, x: jnp.ndarray, a: AttentionConfig,
+                  eps: float) -> jnp.ndarray:
+    """Full-sequence MLA (train / prefill): expand latent to per-head K/V."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q_nope, q_rope = mla_queries(p, x, a, eps, positions)
+    c_kv, k_rope = mla_latent(p, x, a, eps, positions)
+    k_nope = (c_kv @ p["wk_b"].astype(x.dtype)).reshape(b, s, a.n_heads, a.qk_nope_dim)
+    v = (c_kv @ p["wv_b"].astype(x.dtype)).reshape(b, s, a.n_heads, a.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, a.n_heads, a.qk_rope_dim))], axis=-1)
+    scale = (a.qk_nope_dim + a.qk_rope_dim) ** -0.5
+    o = attention_scores(q, k, v, causal=True, cap=a.attn_softcap, scale=scale)
+    return o.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def mla_decode_attention(p: Params, x: jnp.ndarray, a: AttentionConfig, eps: float,
+                         cache_ckv: jnp.ndarray, cache_krope: jnp.ndarray,
+                         cache_len: jnp.ndarray) -> jnp.ndarray:
+    """Absorbed-matmul MLA decode: queries are mapped into the latent space
+    (q_nope @ wk_b per head) so attention runs directly against the R-dim
+    latent cache — the MLA memory/bandwidth win. x: (B, 1, D).
+    cache_ckv: (B, Smax, R); cache_krope: (B, Smax, rope)."""
+    b, s, _ = x.shape
+    h, rope, nope, dv = a.n_heads, a.qk_rope_dim, a.qk_nope_dim, a.v_head_dim
+    r = a.kv_lora_rank
+    positions = cache_len[None] + jnp.arange(s)[None, :] * jnp.ones((b, 1), jnp.int32)
+    q_nope, q_rope = mla_queries(p, x, a, eps, positions)
+    wk_b = p["wk_b"].astype(x.dtype).reshape(r, h, nope)
+    # absorb: q_lat[b,s,h,r] = q_nope . wk_b^T
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b)
+    kpos = jnp.arange(cache_ckv.shape[1])
+    # bf16 latent cache with f32 accumulation — never materialize an f32
+    # copy of the (B, Smax, R) cache (see attention_scores note)
+    logits = (dot_f32("bshr,bkr->bhsk", q_lat, cache_ckv) +
+              dot_f32("bshn,bkn->bhsk", q_rope, cache_krope))
+    logits = logits * ((nope + rope) ** -0.5)
+    logits = softcap(logits, a.attn_softcap)
+    mask = kpos[None, None, None, :] < (cache_len + 1)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o_lat = dot_f32("bhsk,bkr->bshr", probs.astype(cache_ckv.dtype),
+                    cache_ckv)
+    wv_b = p["wv_b"].astype(x.dtype).reshape(r, h, dv)
+    o = jnp.einsum("bshr,rhd->bshd", o_lat.astype(x.dtype), wv_b)
+    return o.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# dense gated-MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return dict(
+        w_gate=lecun_normal(ks[0], (d_model, d_ff)),
+        w_up=lecun_normal(ks[1], (d_model, d_ff)),
+        w_down=lecun_normal(ks[2], (d_ff, d_model)),
+    )
+
+
+def mlp(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_up"].astype(x.dtype)
+    return (g * u) @ p["w_down"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding
+# --------------------------------------------------------------------------
+
+def init_embed(key: jax.Array, vocab_padded: int, d_model: int) -> jnp.ndarray:
+    return 0.02 * jax.random.normal(key, (vocab_padded, d_model), jnp.float32)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed(table: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., D) -> logits (..., Vp) in f32."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32))

@@ -1,0 +1,309 @@
+"""Mamba-2 (SSD — state-space duality) language model.
+
+Training/prefill use the chunked SSD algorithm: within-chunk terms are
+dense matmuls (MXU work), across-chunk terms a short ``lax.scan`` over the
+per-head (P, N) states.  Decode is the O(1)-state recurrence.  The
+intra-chunk contraction is also provided as a Pallas kernel
+(``repro.kernels.ssd_scan``); this module is the jnp/XLA path that the
+SPMD dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.init import lecun_normal
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import layers as L
+from repro.sharding.ctx import constrain, residual_spec, P
+
+Params = Dict
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    return s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state
+
+
+def in_proj_dim(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    return 2 * s.d_inner(cfg.d_model) + 2 * s.n_groups * s.d_state + s.n_heads(cfg.d_model)
+
+
+def init_mamba_block(key: jax.Array, cfg: ModelConfig) -> Params:
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,)) *
+                 (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    return dict(
+        norm=jnp.zeros((cfg.d_model,)),
+        in_proj=lecun_normal(ks[0], (cfg.d_model, in_proj_dim(cfg))),
+        conv_w=0.1 * jax.random.normal(ks[1], (conv_dim(cfg), s.d_conv)),
+        conv_b=jnp.zeros((conv_dim(cfg),)),
+        A_log=jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        D=jnp.ones((nh,)),
+        dt_bias=dt_bias,
+        gate_norm=jnp.zeros((d_inner,)),
+        out_proj=lecun_normal(ks[3], (d_inner, cfg.d_model)),
+    )
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig) -> Params:
+    k_embed, k_layers = jax.random.split(key)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    return dict(
+        embed=L.init_embed(k_embed, cfg.vocab_padded, cfg.d_model),
+        layers=jax.vmap(lambda k: init_mamba_block(k, cfg))(keys),
+        final_norm=jnp.zeros((cfg.d_model,)),
+    )
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., cs) -> (..., cs, cs) where out[i, j] = sum_{j < t <= i} x[t],
+    -inf above the diagonal (the 1-semiseparable mask of SSD)."""
+    cs = x.shape[-1]
+    cum = jnp.cumsum(x, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    i = jnp.arange(cs)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+                init_state: jnp.ndarray | None = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan (Mamba-2 §6 listing, jnp).
+
+    x: (b, s, h, p); dt: (b, s, h) post-softplus; A: (h,) negative;
+    B, C: (b, s, h, n) (groups already broadcast to heads).
+    Returns (y (b, s, h, p), final_state (b, h, p, n)). f32 math inside.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        # zero-padded tail: dt=0 -> exp(0)=1 decay, zero input — an
+        # identity extension of the recurrence (y tail sliced off below)
+        padseq = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, dt, B, C = padseq(x), padseq(dt), padseq(B), padseq(C)
+        s = s + pad
+    nc = s // chunk
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, chunk, h, p).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(f32)
+    Bc = B.reshape(b, nc, chunk, h, n).astype(f32)
+    Cc = C.reshape(b, nc, chunk, h, n).astype(f32)
+    dA = dtc * A.astype(f32)                                  # (b,nc,cs,h)
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # 1. intra-chunk (the dense MXU part)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # (b,nc,h,cs,cs)
+    CB = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)
+    Y_diag = jnp.einsum("bchls,bcsh,bcshp->bclhp", CB * Lmat, dtc, xc)
+
+    # 2. per-chunk input states
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)      # (b,nc,cs,h)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn", Bc, decay_states * dtc, xc)
+
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                 # (b,nc,h)
+    s0 = (jnp.zeros((b, h, p, n), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def scan_fn(carry, xs):
+        st, dec = xs                                           # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                      # emit PREV state
+
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (b,nc,h,p,n)
+
+    # 4. inter-chunk outputs
+    state_decay = jnp.exp(dA_cum)                              # (b,nc,cs,h)
+    Y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc, prev_states, state_decay)
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    if pad:
+        y = y[:, : s - pad]
+    return y.astype(x.dtype), final
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv1d. xBC: (b, s, c); w: (c, k)."""
+    k = w.shape[-1]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[:, i] for i in range(k))
+    return out + bias
+
+
+def mamba_mixer(lp: Params, x: jnp.ndarray, cfg: ModelConfig,
+                want_state: bool = False):
+    """x: (b, s, d_model) -> y (b, s, d_model) [, (conv_state, ssm_state)]."""
+    s_cfg = cfg.ssm
+    b, s, _ = x.shape
+    d_inner = s_cfg.d_inner(cfg.d_model)
+    nh, hp, gn = s_cfg.n_heads(cfg.d_model), s_cfg.head_dim, s_cfg.n_groups
+    n = s_cfg.d_state
+
+    zxbcdt = x @ lp["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim(cfg)]
+    dt = zxbcdt[..., d_inner + conv_dim(cfg):]
+    conv_in = xBC
+    xBC = jax.nn.silu(_causal_conv(xBC, lp["conv_w"].astype(x.dtype),
+                                   lp["conv_b"].astype(x.dtype)))
+    xs = xBC[..., :d_inner].reshape(b, s, nh, hp)
+    Bmat = xBC[..., d_inner:d_inner + gn * n].reshape(b, s, gn, n)
+    Cmat = xBC[..., d_inner + gn * n:].reshape(b, s, gn, n)
+    rep = nh // gn
+    Bmat = jnp.repeat(Bmat, rep, axis=2)
+    Cmat = jnp.repeat(Cmat, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"])
+
+    y, final_state = ssd_chunked(xs, dt, A, Bmat, Cmat, s_cfg.chunk_size)
+    y = y + xs * lp["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    out = y @ lp["out_proj"].astype(x.dtype)
+    if want_state:
+        conv_state = conv_in[:, -(s_cfg.d_conv - 1):, :].swapaxes(1, 2)  # (b,c,k-1)
+        return out, (conv_state, final_state)
+    return out
+
+
+def mamba_block(lp: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    h = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+    x = x + mamba_mixer(lp, h, cfg)
+    return constrain(x, residual_spec(cfg))
+
+
+# --------------------------------------------------------------------------
+# model-level entry points
+# --------------------------------------------------------------------------
+
+def _remat(fn, cfg):
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def trunk(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    body = _remat(functools.partial(
+        lambda lp, h: mamba_block(lp, h, cfg)), cfg)
+
+    def step(h, lp):
+        return body(lp, h), None
+
+    x, _ = jax.lax.scan(step, x, params["layers"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss(params: Params, batch: Dict, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    from repro.models.transformer import _xent  # shared chunked CE
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    x = constrain(x, P("data", None, None))
+    h = trunk(params, x, cfg)
+    labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    mask = jnp.pad(jnp.ones_like(tokens[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+    nll = _xent(params, h, labels, mask, cfg)
+    return nll, dict(nll=nll, aux=jnp.zeros((), jnp.float32))
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int) -> Dict:
+    """SSM decode state is O(1) in sequence length (the long_500k win)."""
+    del max_seq
+    s = cfg.ssm
+    dt = jnp.dtype(cfg.compute_dtype)
+    nh, hp = s.n_heads(cfg.d_model), s.head_dim
+    return dict(
+        conv=jnp.zeros((cfg.n_layers, batch_size, conv_dim(cfg), s.d_conv - 1), dt),
+        ssm=jnp.zeros((cfg.n_layers, batch_size, nh, hp, s.d_state), jnp.float32),
+        len=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params: Params, batch: Dict, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    x = constrain(x, P("data", None, None))
+
+    def step(h, lp):
+        hn = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+        out, (conv_state, ssm_state) = mamba_mixer(lp, hn, cfg, want_state=True)
+        h = h + out
+        return h, (conv_state, ssm_state)
+
+    x, (conv_s, ssm_s) = jax.lax.scan(step, x, params["layers"])
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    from repro.models.transformer import logits_head
+    logits = logits_head(params, h[:, -1:, :], cfg)[:, 0, :]
+    cache = dict(conv=conv_s, ssm=ssm_s, len=jnp.asarray(tokens.shape[1], jnp.int32))
+    return logits, cache
+
+
+def mamba_decode_mixer(lp: Params, x: jnp.ndarray, cfg: ModelConfig,
+                       conv_state: jnp.ndarray, ssm_state: jnp.ndarray):
+    """Single-token recurrence. x: (b, d_model); conv_state: (b, c, k-1);
+    ssm_state: (b, h, p, n) f32."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    d_inner = s_cfg.d_inner(cfg.d_model)
+    nh, hp, gn, n = (s_cfg.n_heads(cfg.d_model), s_cfg.head_dim,
+                     s_cfg.n_groups, s_cfg.d_state)
+    zxbcdt = x @ lp["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim(cfg)]
+    dt = zxbcdt[..., d_inner + conv_dim(cfg):]
+
+    window = jnp.concatenate([conv_state, xBC[:, :, None]], axis=-1)  # (b,c,k)
+    new_conv_state = window[..., 1:]
+    conv_out = jnp.sum(window * lp["conv_w"].astype(x.dtype), axis=-1) + lp["conv_b"].astype(x.dtype)
+    xBC = jax.nn.silu(conv_out)
+
+    xs = xBC[..., :d_inner].reshape(b, nh, hp)
+    Bv = jnp.repeat(xBC[..., d_inner:d_inner + gn * n].reshape(b, gn, n), nh // gn, axis=1)
+    Cv = jnp.repeat(xBC[..., d_inner + gn * n:].reshape(b, gn, n), nh // gn, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])     # (b, h)
+    A = -jnp.exp(lp["A_log"])
+    dA = jnp.exp(dt * A)                                             # (b, h)
+    upd = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bv.astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    new_state = ssm_state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Cv.astype(jnp.float32)).astype(x.dtype)
+    y = y + xs * lp["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(b, d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+    return y @ lp["out_proj"].astype(x.dtype), new_conv_state, new_state
+
+
+def decode_step(params: Params, cache: Dict, tokens: jnp.ndarray,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    x = L.embed(params["embed"], tokens[:, 0], jnp.dtype(cfg.compute_dtype))
+
+    def step(h, xs):
+        lp, conv_s, ssm_s = xs
+        hn = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+        out, new_conv, new_ssm = mamba_decode_mixer(lp, hn, cfg, conv_s, ssm_s)
+        return h + out, (new_conv, new_ssm)
+
+    x, (conv_s, ssm_s) = jax.lax.scan(step, x, (params["layers"], cache["conv"], cache["ssm"]))
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    from repro.models.transformer import logits_head
+    logits = logits_head(params, h[:, None, :], cfg)[:, 0, :]
+    return logits, dict(conv=conv_s, ssm=ssm_s, len=cache["len"] + 1)

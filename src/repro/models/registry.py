@@ -1,0 +1,61 @@
+"""Model API dispatch: one uniform interface over all families.
+
+    api = get_api(cfg)
+    params = api.init(key, cfg)
+    loss, metrics = api.loss(params, batch, cfg)
+    logits, cache = api.prefill(params, batch, cfg)
+    logits, cache = api.decode_step(params, cache, tokens, cfg)
+    cache = api.init_cache(cfg, batch_size, max_seq)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2, transformer, whisper, zamba2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+_APIS: Dict[str, ModelAPI] = {
+    "transformer": ModelAPI(
+        init=transformer.init_transformer,
+        loss=transformer.loss,
+        prefill=transformer.prefill,
+        decode_step=transformer.decode_step,
+        init_cache=transformer.init_cache,
+    ),
+    "mamba2": ModelAPI(
+        init=mamba2.init_mamba2,
+        loss=mamba2.loss,
+        prefill=mamba2.prefill,
+        decode_step=mamba2.decode_step,
+        init_cache=mamba2.init_cache,
+    ),
+    "hybrid": ModelAPI(
+        init=zamba2.init_zamba2,
+        loss=zamba2.loss,
+        prefill=zamba2.prefill,
+        decode_step=zamba2.decode_step,
+        init_cache=zamba2.init_cache,
+    ),
+    "encdec": ModelAPI(
+        init=whisper.init_whisper,
+        loss=whisper.loss,
+        prefill=whisper.prefill,
+        decode_step=whisper.decode_step,
+        init_cache=whisper.init_cache,
+    ),
+}
+
+
+def get_api(cfg: ModelConfig) -> ModelAPI:
+    return _APIS[cfg.family]

@@ -1,0 +1,233 @@
+"""Zamba2-style hybrid: a Mamba-2 trunk with one SHARED attention+MLP block
+applied at a fixed cadence (every ``hybrid_attn_every``-th depth position).
+
+Depth layout for n_layers=81, every=6:
+  13 groups x (5 mamba layers + shared-attn application) + 3 tail mamba
+The shared block's weights appear ONCE in the param tree (the Zamba trick —
+transformer capacity at ~1/13th the parameter cost); its activations differ
+per application site, so decode keeps a KV cache per SITE, not per layer
+(13 caches, not 81 — this is what keeps long_500k decode feasible).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as MB
+from repro.models.transformer import logits_head, _xent
+from repro.sharding.ctx import constrain, residual_spec, P
+
+Params = Dict
+
+
+def layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """(n_groups, mamba_per_group, n_tail_mamba)."""
+    every = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // every
+    per_group = every - 1
+    tail = cfg.n_layers - n_groups * every
+    return n_groups, per_group, tail
+
+
+def n_mamba_layers(cfg: ModelConfig) -> int:
+    g, pg, tail = layout(cfg)
+    return g * pg + tail
+
+
+def init_shared_block(key: jax.Array, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return dict(
+        attn_norm=jnp.zeros((cfg.d_model,)),
+        ffn_norm=jnp.zeros((cfg.d_model,)),
+        attn=L.init_gqa(k1, cfg),
+        ffn=L.init_mlp(k2, cfg.d_model, cfg.d_ff),
+    )
+
+
+def init_zamba2(key: jax.Array, cfg: ModelConfig) -> Params:
+    k_embed, k_m, k_s = jax.random.split(key, 3)
+    nm = n_mamba_layers(cfg)
+    keys = jax.random.split(k_m, nm)
+    return dict(
+        embed=L.init_embed(k_embed, cfg.vocab_padded, cfg.d_model),
+        mamba=jax.vmap(lambda k: MB.init_mamba_block(k, cfg))(keys),
+        shared=init_shared_block(k_s, cfg),
+        final_norm=jnp.zeros((cfg.d_model,)),
+    )
+
+
+def _split_mamba(params: Params, cfg: ModelConfig):
+    """Stacked mamba params -> (grouped (G, PG, ...), tail (T, ...))."""
+    g, pg, tail = layout(cfg)
+    grouped = jax.tree.map(lambda a: a[: g * pg].reshape((g, pg) + a.shape[1:]),
+                           params["mamba"])
+    tail_p = jax.tree.map(lambda a: a[g * pg:], params["mamba"])
+    return grouped, tail_p
+
+
+def shared_attn_apply(sp: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    a = cfg.attention
+    h = L.rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+    x = x + L.gqa_attention(sp["attn"], h, a,
+                            head_constraints=cfg.attn_head_constraints)
+    h = L.rms_norm(x, sp["ffn_norm"], cfg.norm_eps)
+    x = x + L.mlp(sp["ffn"], h)
+    return constrain(x, residual_spec(cfg))
+
+
+def trunk(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    grouped, tail_p = _split_mamba(params, cfg)
+    g, pg, tail = layout(cfg)
+    body = MB._remat(lambda lp, h: MB.mamba_block(lp, h, cfg), cfg)
+
+    def inner(h, lp):
+        return body(lp, h), None
+
+    def group_step(h, glp):
+        h, _ = jax.lax.scan(inner, h, glp)
+        h = shared_attn_apply(params["shared"], h, cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(group_step, x, grouped)
+    if tail:
+        x, _ = jax.lax.scan(inner, x, tail_p)
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss(params: Params, batch: Dict, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    x = constrain(x, P("data", None, None))
+    h = trunk(params, x, cfg)
+    labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    mask = jnp.pad(jnp.ones_like(tokens[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+    nll = _xent(params, h, labels, mask, cfg)
+    return nll, dict(nll=nll, aux=jnp.zeros((), jnp.float32))
+
+
+# --------------------------------------------------------------------------
+# inference: mamba states per mamba layer + KV cache per shared-attn SITE
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int) -> Dict:
+    a = cfg.attention
+    s = cfg.ssm
+    dt = jnp.dtype(cfg.compute_dtype)
+    g, _, _ = layout(cfg)
+    nm = n_mamba_layers(cfg)
+    nh, hp = s.n_heads(cfg.d_model), s.head_dim
+    return dict(
+        conv=jnp.zeros((nm, batch_size, MB.conv_dim(cfg), s.d_conv - 1), dt),
+        ssm=jnp.zeros((nm, batch_size, nh, hp, s.d_state), jnp.float32),
+        k=jnp.zeros((g, batch_size, max_seq, a.n_kv_heads, a.head_dim), dt),
+        v=jnp.zeros((g, batch_size, max_seq, a.n_kv_heads, a.head_dim), dt),
+        len=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params: Params, batch: Dict, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    tokens = batch["tokens"]
+    a = cfg.attention
+    x = L.embed(params["embed"], tokens, jnp.dtype(cfg.compute_dtype))
+    x = constrain(x, P("data", None, None))
+    grouped, tail_p = _split_mamba(params, cfg)
+    g, pg, tail = layout(cfg)
+    s_len = tokens.shape[1]
+    positions = jnp.arange(s_len)
+
+    def inner(h, lp):
+        hn = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+        out, (conv_s, ssm_s) = MB.mamba_mixer(lp, hn, cfg, want_state=True)
+        return h + out, (conv_s, ssm_s)
+
+    def group_step(h, glp):
+        h, states = jax.lax.scan(inner, h, glp)
+        sp = params["shared"]
+        hn = L.rms_norm(h, sp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.gqa_project_qkv(sp["attn"], hn, a, positions,
+                                    head_constraints=cfg.attn_head_constraints)
+        o = L.attention_scores(q, k, v, causal=True, cap=a.attn_softcap)
+        h = h + o.reshape(h.shape[0], s_len, -1) @ sp["attn"]["wo"].astype(h.dtype)
+        hn = L.rms_norm(h, sp["ffn_norm"], cfg.norm_eps)
+        h = h + L.mlp(sp["ffn"], hn)
+        h = constrain(h, residual_spec(cfg))
+        return h, (states, k, v)
+
+    x, (g_states, ks, vs) = jax.lax.scan(group_step, x, grouped)
+    conv_g, ssm_g = g_states          # (G, PG, ...)
+    if tail:
+        x, (conv_t, ssm_t) = jax.lax.scan(inner, x, tail_p)
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_head(params, h[:, -1:, :], cfg)[:, 0, :]
+
+    def flat(gp, tp=None):
+        gp = gp.reshape((-1,) + gp.shape[2:])
+        return jnp.concatenate([gp, tp], axis=0) if tp is not None else gp
+
+    cache = dict(
+        conv=flat(conv_g, conv_t if tail else None),
+        ssm=flat(ssm_g, ssm_t if tail else None),
+        k=ks, v=vs,
+        len=jnp.asarray(s_len, jnp.int32),
+    )
+    return logits, cache
+
+
+def decode_step(params: Params, cache: Dict, tokens: jnp.ndarray,
+                cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    a = cfg.attention
+    g, pg, tail = layout(cfg)
+    b = tokens.shape[0]
+    pos = cache["len"]
+    x = L.embed(params["embed"], tokens[:, 0], jnp.dtype(cfg.compute_dtype))
+    grouped, tail_p = _split_mamba(params, cfg)
+    conv_g = cache["conv"][: g * pg].reshape((g, pg) + cache["conv"].shape[1:])
+    ssm_g = cache["ssm"][: g * pg].reshape((g, pg) + cache["ssm"].shape[1:])
+    conv_t = cache["conv"][g * pg:]
+    ssm_t = cache["ssm"][g * pg:]
+
+    def inner(h, xs):
+        lp, conv_s, ssm_s = xs
+        hn = L.rms_norm(h, lp["norm"], cfg.norm_eps)
+        out, nc, ns = MB.mamba_decode_mixer(lp, hn, cfg, conv_s, ssm_s)
+        return h + out, (nc, ns)
+
+    def group_step(h, xs):
+        glp, conv_s, ssm_s, k_c, v_c = xs
+        h, (nc, ns) = jax.lax.scan(inner, h, (glp, conv_s, ssm_s))
+        sp = params["shared"]
+        hn = L.rms_norm(h[:, None, :], sp["attn_norm"], cfg.norm_eps)
+        q, k, v = L.gqa_project_qkv(sp["attn"], hn, a, jnp.full((b, 1), pos, jnp.int32))
+        k_c = jax.lax.dynamic_update_slice(k_c, k, (0, pos, 0, 0))
+        v_c = jax.lax.dynamic_update_slice(v_c, v, (0, pos, 0, 0))
+        o = L.attention_scores(q, k_c, v_c, causal=False, cap=a.attn_softcap,
+                               q_positions=jnp.full((1,), pos, jnp.int32),
+                               k_positions=jnp.arange(k_c.shape[1]),
+                               k_len=pos + 1)
+        h2 = h[:, None, :] + o.reshape(b, 1, -1) @ sp["attn"]["wo"].astype(h.dtype)
+        hn = L.rms_norm(h2, sp["ffn_norm"], cfg.norm_eps)
+        h2 = h2 + L.mlp(sp["ffn"], hn)
+        return h2[:, 0, :], (nc, ns, k_c, v_c)
+
+    x, (conv_gn, ssm_gn, ks, vs) = jax.lax.scan(
+        group_step, x, (grouped, conv_g, ssm_g, cache["k"], cache["v"]))
+    if tail:
+        x, (conv_tn, ssm_tn) = jax.lax.scan(inner, x, (tail_p, conv_t, ssm_t))
+
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_head(params, h[:, None, :], cfg)[:, 0, :]
+
+    def flat(gp, tp=None):
+        gp = gp.reshape((-1,) + gp.shape[2:])
+        return jnp.concatenate([gp, tp], axis=0) if tp is not None else gp
+
+    new_cache = dict(
+        conv=flat(conv_gn, conv_tn if tail else None),
+        ssm=flat(ssm_gn, ssm_tn if tail else None),
+        k=ks, v=vs, len=pos + 1,
+    )
+    return logits, new_cache

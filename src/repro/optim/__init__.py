@@ -1,0 +1,4 @@
+"""Optimizers, LR schedules, gradient transforms (self-contained; no optax)."""
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule, wsd_schedule, linear_warmup
+from repro.optim.clip import clip_by_global_norm

@@ -1,0 +1,73 @@
+"""Blockwise int8 quantization for optimizer state (beyond-paper memory
+trick: 8-bit Adam a la Dettmers et al., adapted to a pure-pytree JAX form).
+
+A quantized tensor is stored as {q: int8 same-shape, scale: f32 with the
+last dim reduced by BLOCK}.  Quantize/dequantize are cheap elementwise ops
+fused into the optimizer update by XLA; the HBM win is 4x vs f32 state
+(the difference between a 1T-param model fitting 2 pods or 4).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def _pad_to_block(x: jnp.ndarray):
+    n = x.shape[-1]
+    pad = (-n) % BLOCK
+    if pad:
+        cfg = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, cfg)
+    return x, n
+
+
+def quantize(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """x: float (..., N) -> {q int8 (..., N), scale f32 (..., ceil(N/B))}."""
+    xp, n = _pad_to_block(x.astype(jnp.float32))
+    blocks = xp.reshape(xp.shape[:-1] + (-1, BLOCK))
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127).astype(jnp.int8)
+    q = q.reshape(xp.shape)[..., :n]
+    return dict(q=q, scale=scale)
+
+
+def dequantize(qs: Dict[str, jnp.ndarray], n: int) -> jnp.ndarray:
+    q, scale = qs["q"], qs["scale"]
+    qp, _ = _pad_to_block(q.astype(jnp.float32))
+    blocks = qp.reshape(qp.shape[:-1] + (-1, BLOCK))
+    x = blocks * scale[..., None]
+    return x.reshape(qp.shape)[..., :n]
+
+
+def zeros_quantized(shape) -> Dict[str, jnp.ndarray]:
+    n = shape[-1]
+    nb = (n + BLOCK - 1) // BLOCK
+    return dict(q=jnp.zeros(shape, jnp.int8),
+                scale=jnp.full(shape[:-1] + (nb,), 1e-12, jnp.float32))
+
+
+# -- log-domain variant for strictly-positive, high-dynamic-range state ------
+# (Adam's second moment: linear absmax int8 crushes small v entries to 0,
+# making 1/sqrt(v) explode; quantizing log(v) bounds the error
+# MULTIPLICATIVELY — the Dettmers-style dynamic-quant insight, in a
+# pytree-friendly form.)
+
+_LOG_FLOOR = 1e-12
+
+
+def quantize_log(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    return quantize(jnp.log(jnp.maximum(x, _LOG_FLOOR)))
+
+
+def dequantize_log(qs: Dict[str, jnp.ndarray], n: int) -> jnp.ndarray:
+    v = jnp.exp(dequantize(qs, n))
+    return jnp.where(v <= _LOG_FLOOR * 1.5, 0.0, v)
+
+
+def zeros_quantized_log(shape) -> Dict[str, jnp.ndarray]:
+    return quantize_log(jnp.zeros(shape, jnp.float32))

@@ -1,0 +1,28 @@
+"""LR schedules: cosine (llama-style) and WSD (warmup-stable-decay — the
+MiniCPM schedule the assigned minicpm-2b config carries)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    return peak * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, peak: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    warm = linear_warmup(step, warmup_steps, peak)
+    t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak * cos)
+
+
+def wsd_schedule(step, peak: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, final_frac: float = 0.01):
+    """Warmup -> Stable (constant peak) -> Decay (exponential-ish linear)."""
+    warm = linear_warmup(step, warmup_steps, peak)
+    in_decay = step >= warmup_steps + stable_steps
+    t = jnp.clip((step - warmup_steps - stable_steps) / max(decay_steps, 1), 0.0, 1.0)
+    decay = peak * jnp.exp(jnp.log(final_frac) * t)
+    return jnp.where(step < warmup_steps, warm,
+                     jnp.where(in_decay, decay, peak))

@@ -1,0 +1,19 @@
+"""TPU v5e hardware constants (the TARGET device; container runs CPU)."""
+
+PEAK_FLOPS_BF16 = 197e12        # per chip, bf16
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (~)
+HBM_BYTES = 16 * 1024**3        # 16 GiB per chip
+CHIPS_PER_POD = 256
+
+# effective wire-bytes multiplier per collective kind for ring algorithms
+# on n participants: all-reduce moves 2(n-1)/n x data, all-gather /
+# reduce-scatter (n-1)/n x, all-to-all (n-1)/n x, permute 1x.
+# n is large (16..512) so (n-1)/n ~ 1.
+COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}

@@ -1,0 +1,143 @@
+"""Batched serving engine: continuous-batching KV-cache decode over the
+uniform model API (GQA / MLA-latent / SSM-state / hybrid caches all ride
+the same ``init_cache/prefill/decode_step`` contract).
+
+The engine keeps one padded decode batch live; requests join by having
+their prompt prefilled into a slot's cache region and leave on EOS/max
+tokens.  On TPU the decode step is the latency-bound program the roofline
+decode cells measure; here it runs the same code on CPU at smoke scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_api
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                   # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0             # 0 => greedy
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Single-host reference engine (batch = n_slots, one sequence each)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_seq: int = 256, eos_id: Optional[int] = None, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.api = get_api(cfg)
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self._key = jax.random.key(seed)
+
+        # per-slot independent caches (batch axis = 1) so prefill results
+        # can be spliced in/out without touching other slots.
+        self._caches = [self.api.init_cache(cfg, 1, max_seq)
+                        for _ in range(n_slots)]
+        self._reqs: List[Optional[Request]] = [None] * n_slots
+
+        self._prefill = jax.jit(
+            lambda p, b: self.api.prefill(p, b, cfg))
+        self._decode = jax.jit(
+            lambda p, c, t: self.api.decode_step(p, c, t, cfg))
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self._reqs):
+            if r is None:
+                return i
+        return None
+
+    def add_request(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        batch = dict(tokens=jnp.asarray(req.prompt, jnp.int32)[None, :])
+        if self.cfg.frontend is not None:
+            batch["frontend_embeds"] = jnp.zeros(
+                (1, self.cfg.n_frontend_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.compute_dtype))
+        logits, cache = self._prefill(self.params, batch)
+        # splice the prefilled cache into a max_seq-capacity cache
+        full = self.api.init_cache(self.cfg, 1, self.max_seq)
+        plen = int(req.prompt.shape[0])
+        full = _splice_cache(full, cache, plen, self.cfg)
+        self._caches[slot] = full
+        self._reqs[slot] = req
+        req.out_tokens.append(self._sample(logits, req)[0])
+        return True
+
+    def _sample(self, logits: jnp.ndarray, req: Request) -> List[int]:
+        if req.temperature <= 0.0:
+            return [int(t) for t in np.asarray(jnp.argmax(logits, -1)).ravel()]
+        self._key, sub = jax.random.split(self._key)
+        draw = jax.random.categorical(sub, logits / req.temperature, axis=-1)
+        return [int(t) for t in np.asarray(draw).ravel()]
+
+    def step(self) -> int:
+        """One decode step over all active slots. Returns #active."""
+        active = [i for i, r in enumerate(self._reqs) if r is not None]
+        if not active:
+            return 0
+        for i in active:
+            req = self._reqs[i]
+            tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
+            logits, self._caches[i] = self._decode(self.params,
+                                                   self._caches[i], tok)
+            nxt = self._sample(logits, req)[0]
+            req.out_tokens.append(nxt)
+            if (len(req.out_tokens) >= req.max_new_tokens or
+                    (self.eos_id is not None and nxt == self.eos_id)):
+                req.done = True
+                self._reqs[i] = None
+        return len(active)
+
+    def run_to_completion(self, requests: List[Request],
+                          max_steps: int = 10000) -> List[Request]:
+        pending = list(requests)
+        done: List[Request] = []
+        steps = 0
+        while (pending or any(r is not None for r in self._reqs)) \
+                and steps < max_steps:
+            while pending and self._free_slot() is not None:
+                self.add_request(pending.pop(0))
+            self.step()
+            done.extend(r for r in requests if r.done and r not in done)
+            steps += 1
+        return requests
+
+
+def _splice_cache(full: Dict, pre: Dict, plen: int, cfg: ModelConfig) -> Dict:
+    """Copy a prefill cache (seq capacity = prompt len) into the head of a
+    long-capacity cache.  SSM states are O(1) and copy wholesale."""
+    out = dict(full)
+    for k in full:
+        if k == "len":
+            out[k] = pre["len"]
+        elif k in ("ssm", "conv"):
+            out[k] = pre[k]
+        elif k in ("cross_k", "cross_v"):
+            out[k] = pre[k]
+        elif k in ("k", "v"):           # (L, B, S, H, D)
+            out[k] = jax.lax.dynamic_update_slice(
+                full[k], pre[k], (0, 0, 0, 0, 0))
+        elif k in ("ckv", "krope"):     # (L, B, S, R)
+            out[k] = jax.lax.dynamic_update_slice(
+                full[k], pre[k], (0, 0, 0, 0))
+        else:
+            out[k] = pre[k]
+    return out

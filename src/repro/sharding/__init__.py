@@ -1,0 +1,1 @@
+"""SPMD distribution layer: mesh builders, partition rules, constraints."""

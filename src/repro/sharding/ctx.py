@@ -1,0 +1,102 @@
+"""Sharding-constraint helper usable from model code that must also run in
+un-meshed unit tests.
+
+``constrain(x, spec)`` applies ``with_sharding_constraint`` only when an
+ambient mesh is active (the dry-run / trainer wrap lowering in ``with
+mesh:``); otherwise it is the identity, so CPU tests and reduced smoke
+configs never touch device topology.  Axis names in the spec that the
+active mesh does not define, or that do not divide the corresponding array
+dimension, are dropped (-> replicated on that dim) so one set of rules
+serves the 1-device test mesh, the 16x16 pod, and the 2x16x16 multi-pod
+mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec
+
+P = PartitionSpec
+
+
+def _active_mesh():
+    # legacy `with mesh:` context (what launch/dryrun uses)
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or m.empty:
+            return None
+        return m
+    except Exception:
+        return None
+
+
+def _mesh_axis_sizes(mesh) -> dict:
+    if hasattr(mesh, "shape"):
+        try:
+            return dict(mesh.shape)  # Mesh.shape is OrderedDict name->size
+        except Exception:
+            pass
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _sanitize(spec: PartitionSpec, shape: Tuple[int, ...], mesh) -> PartitionSpec:
+    sizes = _mesh_axis_sizes(mesh)
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        names = tuple(n for n in names if n in sizes)
+        if not names:
+            out.append(None)
+            continue
+        total = int(np.prod([sizes[n] for n in names]))
+        if i < len(shape) and shape[i] % total == 0:
+            out.append(names if len(names) > 1 else names[0])
+        else:
+            out.append(None)
+    return PartitionSpec(*out)
+
+
+def constrain(x, spec: PartitionSpec, require_full: bool = False):
+    """Mesh-aware, divisibility-safe with_sharding_constraint.
+
+    require_full: if ANY requested axis gets dropped by the divisibility
+    sanitizer, skip the constraint entirely instead of pinning the dim to
+    REPLICATED — a dropped entry would otherwise force e.g. full k/v
+    all-gathers for head counts that don't divide the model axis
+    (measured 32x collective regression on minicpm prefill)."""
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    s = _sanitize(spec, x.shape, mesh)
+    if require_full and tuple(s) != tuple(spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def sanitize_tree(specs, shapes, mesh):
+    """Tree-wise _sanitize: drop undefined / non-dividing axes from a pytree
+    of PartitionSpecs given matching ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda s, a: _sanitize(s, a.shape, mesh), specs, shapes,
+        is_leaf=lambda s: isinstance(s, PartitionSpec))
+
+
+def residual_spec(cfg):
+    """Between-block residual (B, S, D) PartitionSpec per config policy."""
+    if not cfg.shard_activations_model:
+        return P("data", None, None)
+    if getattr(cfg, "activation_layout", "hidden") == "seq":
+        return P("data", "model", None)
+    return P("data", None, "model")

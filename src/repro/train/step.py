@@ -1,0 +1,72 @@
+"""Pure-function training step: (state, batch) -> (state, metrics).
+
+The whole step — loss, backward, clip, schedule, AdamW — is one jitted
+SPMD program; restart-exactness (fault tolerance) falls out of purity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import get_api
+from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedules import cosine_schedule
+
+State = Dict[str, Any]
+
+
+def make_init_state(cfg: ModelConfig, adamw_cfg: AdamWConfig) -> Callable:
+    api = get_api(cfg)
+
+    def init_state(key) -> State:
+        params = api.init(key, cfg)
+        if cfg.param_dtype != "float32":
+            dt = jnp.dtype(cfg.param_dtype)
+            params = jax.tree.map(
+                lambda p: p.astype(dt) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+                params)
+        return dict(params=params, opt=adamw_init(params, adamw_cfg))
+
+    return init_state
+
+
+def make_train_step(cfg: ModelConfig, adamw_cfg: AdamWConfig,
+                    schedule: Callable | None = None,
+                    max_grad_norm: float = 1.0) -> Callable:
+    api = get_api(cfg)
+    if schedule is None:
+        schedule = functools.partial(cosine_schedule, peak=3e-4,
+                                     warmup_steps=2000, total_steps=100000)
+
+    def train_step(state: State, batch: Dict) -> Tuple[State, Dict]:
+        def loss_fn(params):
+            return api.loss(params, batch, cfg)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = schedule(state["opt"]["count"])
+        new_params, new_opt = adamw_update(state["params"], grads,
+                                           state["opt"], lr, adamw_cfg)
+        out_metrics = dict(loss=loss, grad_norm=gnorm, lr=lr, **metrics)
+        return dict(params=new_params, opt=new_opt), out_metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    api = get_api(cfg)
+
+    def eval_step(params, batch):
+        loss, metrics = api.loss(params, batch, cfg)
+        return dict(loss=loss, **metrics)
+
+    return eval_step
+
+
+def adamw_for(cfg: ModelConfig) -> AdamWConfig:
+    return AdamWConfig(state_dtype=cfg.opt_state_dtype)

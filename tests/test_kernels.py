@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as fa_raw
+
+
+@pytest.mark.parametrize("s,d,dtype", [
+    (128, 64, jnp.float32), (192, 64, jnp.float32), (256, 128, jnp.float32),
+    (128, 64, jnp.bfloat16), (100, 32, jnp.float32),
+])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (False, None, None), (True, 48, None),
+    (True, None, 50.0), (True, 32, 30.0),
+])
+def test_flash_attention_sweep(key, s, d, dtype, causal, window, cap):
+    q = jax.random.normal(key, (2, s, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, s, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, s, d), dtype)
+    o = fa_raw(q, k, v, causal=causal, window=window, softcap=cap,
+               block_q=64, block_k=64, interpret=True)
+    r = ref.attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,f,c", [(64, 32, 5), (130, 64, 10), (16, 16, 3)])
+def test_mahalanobis_sweep(key, b, f, c):
+    q = jax.random.normal(key, (b, f))
+    mu = jax.random.normal(jax.random.fold_in(key, 1), (c, f))
+    a = jax.random.normal(jax.random.fold_in(key, 2), (c, f, f))
+    sinv = jnp.einsum("cij,ckj->cik", a, a) + 0.1 * jnp.eye(f)
+    got = ops.mahalanobis(q, mu, sinv)
+    want = ref.mahalanobis_ref(q, mu, sinv)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("b,f,c", [(100, 48, 7), (257, 64, 4), (8, 8, 2)])
+def test_segment_pool_sweep(key, b, f, c):
+    x = jax.random.normal(key, (b, f))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, c)
+    s1, c1 = ops.segment_pool(x, y, c)
+    s2, c2 = ref.segment_pool_ref(x, y, c)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("e,c,d,f,dtype", [
+    (4, 64, 96, 80, jnp.float32), (2, 130, 64, 64, jnp.float32),
+    (3, 32, 48, 40, jnp.bfloat16),
+])
+def test_gmm_sweep(key, e, c, d, f, dtype):
+    x = jax.random.normal(key, (e, c, d), dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (e, d, f), dtype)
+    got = ops.gmm(x, w)
+    want = ref.gmm_ref(x, w)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("g,q,p,n", [(6, 32, 16, 8), (2, 64, 32, 16)])
+def test_ssd_chunk_sweep(key, g, q, p, n):
+    x = jax.random.normal(key, (g, q, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (g, q)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (g,)))
+    B = jax.random.normal(jax.random.fold_in(key, 3), (g, q, n))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (g, q, n))
+    y, st, cd, sd = ops.ssd_chunk(x, dt, A, B, C)
+    for i in range(g):
+        yr, sr, cdr, sdr = ref.ssd_chunk_ref(
+            x[i][:, None, :], dt[i][:, None], A[i:i + 1],
+            B[i][:, None, :], C[i][:, None, :])
+        np.testing.assert_allclose(np.asarray(y[i]), np.asarray(yr[:, 0]),
+                                   atol=3e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(st[i]), np.asarray(sr[0]),
+                                   atol=3e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(cd[i]), np.asarray(cdr[0]),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(sd[i]), np.asarray(sdr[:, 0]),
+                                   atol=1e-5)
+
+
+def test_ssd_kernel_composes_with_model(key):
+    """Kernel-computed chunks + jnp inter-chunk recurrence == model SSD."""
+    from repro.models.mamba2 import ssd_chunked
+    b, s, h, p, n, chunk = 2, 64, 3, 8, 4, 16
+    x = jax.random.normal(key, (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1), (b, s, h)))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)))
+    B = jax.random.normal(jax.random.fold_in(key, 3), (b, s, h, n))
+    C = jax.random.normal(jax.random.fold_in(key, 4), (b, s, h, n))
+    y_model, final_model = ssd_chunked(x, dt, A, B, C, chunk)
+
+    nc = s // chunk
+
+    # flatten (b, nc, h) into G for the kernel
+    def to_g(t, feat):
+        t = t.reshape(b, nc, chunk, h, feat)
+        return t.transpose(0, 1, 3, 2, 4).reshape(b * nc * h, chunk, feat)
+
+    xg = to_g(x, p)
+    Bg = to_g(B, n)
+    Cg = to_g(C, n)
+    dtg = dt.reshape(b, nc, chunk, h).transpose(0, 1, 3, 2).reshape(-1, chunk)
+    Ag = jnp.tile(A, b * nc)
+    yk, stk, cdk, sdk = ops.ssd_chunk(xg, dtg, Ag, Bg, Cg)
+
+    # inter-chunk recurrence in jnp
+    stk = stk.reshape(b, nc, h, p, n)
+    cdk = cdk.reshape(b, nc, h)
+    sdk = sdk.reshape(b, nc, h, chunk).transpose(0, 1, 3, 2)  # (b,nc,chunk,h)
+    yk = yk.reshape(b, nc, h, chunk, p).transpose(0, 1, 3, 2, 4)
+
+    state = jnp.zeros((b, h, p, n))
+    ys = []
+    for ci in range(nc):
+        y_off = jnp.einsum("blhn,bhpn,blh->blhp",
+                           C.reshape(b, nc, chunk, h, n)[:, ci], state,
+                           sdk[:, ci])
+        ys.append(yk[:, ci] + y_off)
+        state = state * cdk[:, ci][:, :, None, None] + stk[:, ci]
+    y_full = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_model),
+                               atol=2e-3, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(final_model),
+                               atol=2e-3, rtol=1e-2)

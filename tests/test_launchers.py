@@ -1,0 +1,36 @@
+"""Launcher entry points run end-to-end on the local device (subprocess,
+so their arg parsing + mesh/sharding init paths are covered)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(args, timeout=480):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, r.stderr[-2000:]
+    return r.stdout
+
+
+def test_train_launcher(tmp_path):
+    out = _run(["repro.launch.train", "--arch", "gemma2-2b", "--steps", "6",
+                "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path),
+                "--ckpt-every", "4"])
+    assert "done at step 6" in out
+    # auto-resume path: run again to a later step
+    out2 = _run(["repro.launch.train", "--arch", "gemma2-2b", "--steps", "8",
+                 "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path),
+                 "--ckpt-every", "4"])
+    assert "resumed_from=6" in out2
+
+
+def test_serve_launcher():
+    out = _run(["repro.launch.serve", "--arch", "mamba2-780m",
+                "--requests", "3", "--slots", "2", "--max-new", "5",
+                "--prompt-len", "4"])
+    assert "3 requests" in out

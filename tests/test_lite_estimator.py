@@ -1,0 +1,147 @@
+"""LITE estimator correctness (paper Eq. 8, §5.3, Tables D.7/D.8)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lite import (LiteSpec, lite_segment_sum, lite_sum,
+                             sample_h_indices, sample_stratified_indices,
+                             straight_through, subsampled_task_sum)
+
+
+def _encode(p, x):
+    return jnp.tanh(x @ p)
+
+
+@pytest.fixture
+def setup(key):
+    p = jax.random.normal(key, (6, 4))
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (20, 6))
+    return p, xs
+
+
+def test_forward_value_is_exact(setup, key):
+    """LITE's forward value must equal the full-set sum exactly."""
+    p, xs = setup
+    exact = jnp.sum(_encode(p, xs), axis=0)
+    for h in (1, 5, 19):
+        got = lite_sum(_encode, p, xs, key, LiteSpec(h=h))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exact),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_forward_value_exact_with_chunking(setup, key):
+    p, xs = setup
+    exact = jnp.sum(_encode(p, xs), axis=0)
+    for chunk in (1, 3, 7, 100):
+        got = lite_sum(_encode, p, xs, key, LiteSpec(h=4, chunk_size=chunk))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(exact),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_gradient_unbiased(setup):
+    """Mean of LITE gradients over many draws -> exact gradient."""
+    p, xs = setup
+
+    def loss(pp, k, h, exact):
+        z = lite_sum(_encode, pp, xs, k, LiteSpec(h=h, exact=exact))
+        return jnp.sum(jnp.sin(z) ** 2)
+
+    g_exact = jax.grad(lambda pp: loss(pp, jax.random.key(0), 0, True))(p)
+    gfn = jax.jit(jax.grad(loss), static_argnums=(2, 3))
+    draws = []
+    k = jax.random.key(42)
+    for _ in range(300):
+        k, sub = jax.random.split(k)
+        draws.append(np.asarray(gfn(p, sub, 5, False)))
+    draws = np.stack(draws)
+    sem = draws.std(0) / np.sqrt(len(draws))
+    err = np.abs(draws.mean(0) - np.asarray(g_exact))
+    # within 5 standard errors everywhere (unbiasedness)
+    assert np.all(err <= 5 * sem + 1e-6), (err / (sem + 1e-12)).max()
+
+
+def test_gradient_variance_matches_subset_enumeration(key):
+    """LITE backward must equal the manual per-subset estimator (N/H sum)."""
+    W = jax.random.normal(key, (3, 3))
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (4, 3))
+
+    def enc(p, x):
+        return x @ p.T
+
+    def loss(p, k):
+        z = lite_sum(enc, p, xs, k, LiteSpec(h=2))
+        return jnp.sum(z ** 2)
+
+    z_exact = xs.sum(0) @ W.T
+    manual = np.stack([
+        np.asarray(2.0 * jnp.outer(z_exact, xs[jnp.array(S)].sum(0)) * 2.0)
+        for S in itertools.combinations(range(4), 2)])
+    gfn = jax.jit(jax.grad(loss))
+    draws = np.stack([np.asarray(gfn(W, jax.random.fold_in(key, i)))
+                      for i in range(2000)])
+    np.testing.assert_allclose(draws.std(0).mean(), manual.std(0).mean(),
+                               rtol=0.1)
+    # mean within 5 standard errors elementwise (unbiasedness)
+    sem = draws.std(0) / np.sqrt(draws.shape[0])
+    assert np.all(np.abs(draws.mean(0) - manual.mean(0)) <= 5 * sem + 1e-6)
+
+
+def test_segment_sum_counts_and_values(setup, key):
+    p, xs = setup
+    ys = jax.random.randint(jax.random.fold_in(key, 2), (20,), 0, 3)
+    sums, counts = lite_segment_sum(_encode, p, xs, ys, 3, key, LiteSpec(h=8))
+    enc = _encode(p, xs)
+    for c in range(3):
+        expect = jnp.sum(jnp.where((ys == c)[:, None], enc, 0), axis=0)
+        np.testing.assert_allclose(np.asarray(sums[c]), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-6)
+        assert counts[c] == jnp.sum(ys == c)
+
+
+def test_h_geq_n_is_exact_path(setup, key):
+    p, xs = setup
+    g1 = jax.grad(lambda pp: jnp.sum(
+        lite_sum(_encode, pp, xs, key, LiteSpec(h=100)) ** 2))(p)
+    g2 = jax.grad(lambda pp: jnp.sum(
+        lite_sum(_encode, pp, xs, key, LiteSpec(exact=True)) ** 2))(p)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-6)
+
+
+def test_straight_through_semantics():
+    full = jnp.array([10.0, 20.0])
+    grad_val = jnp.array([1.0, 2.0])
+    out = straight_through(full, grad_val, 3.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full))
+    g = jax.grad(lambda gv: jnp.sum(straight_through(full, gv, 3.0)))(grad_val)
+    np.testing.assert_allclose(np.asarray(g), [3.0, 3.0])
+
+
+def test_sample_h_indices_partition(key):
+    h_idx, c_idx = sample_h_indices(key, 10, 4)
+    all_idx = np.sort(np.concatenate([np.asarray(h_idx), np.asarray(c_idx)]))
+    np.testing.assert_array_equal(all_idx, np.arange(10))
+
+
+def test_stratified_covers_all_classes(key):
+    ys = jnp.repeat(jnp.arange(5), 8)          # 5 classes x 8
+    for i in range(20):
+        idx = sample_stratified_indices(jax.random.fold_in(key, i), ys, 5, 7)
+        classes = set(np.asarray(ys[idx]).tolist())
+        assert classes == set(range(5))
+
+
+def test_subsampled_task_value_unbiased(setup):
+    p, xs = setup
+    exact = jnp.sum(_encode(p, xs), axis=0)
+    vals = []
+    k = jax.random.key(3)
+    for _ in range(400):
+        k, sub = jax.random.split(k)
+        vals.append(np.asarray(
+            subsampled_task_sum(_encode, p, xs, sub, LiteSpec(h=5))))
+    vals = np.stack(vals)
+    sem = vals.std(0) / np.sqrt(len(vals))
+    assert np.all(np.abs(vals.mean(0) - np.asarray(exact)) <= 5 * sem + 1e-6)

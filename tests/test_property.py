@@ -1,0 +1,94 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lite import LiteSpec, lite_sum
+from repro.kernels import ops, ref
+from repro.optim.quant import dequantize, quantize
+from repro.sharding.ctx import _sanitize
+from repro.sharding.ctx import P
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(self.shape)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 24), h=st.integers(1, 24), dim=st.integers(1, 8),
+       chunk=st.one_of(st.none(), st.integers(1, 8)), seed=st.integers(0, 2**30))
+def test_lite_forward_always_exact(n, h, dim, chunk, seed):
+    """INVARIANT (paper Eq. 8): LITE's forward value is the exact full sum
+    for every (n, h, chunk) combination."""
+    key = jax.random.key(seed)
+    p = jax.random.normal(key, (dim, dim))
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (n, dim))
+    enc = lambda pp, x: jnp.tanh(x @ pp)
+    got = lite_sum(enc, p, xs, key, LiteSpec(h=h, chunk_size=chunk))
+    want = jnp.sum(enc(p, xs), axis=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(rows=st.integers(1, 5), n=st.integers(1, 513), seed=st.integers(0, 2**30),
+       scale=st.floats(1e-3, 1e3))
+def test_quantize_bounded_error(rows, n, seed, scale):
+    """INVARIANT: blockwise int8 round-trip error <= per-block scale."""
+    x = scale * jax.random.normal(jax.random.key(seed), (rows, n))
+    q = quantize(x)
+    back = dequantize(q, n)
+    per_block_scale = np.asarray(q["scale"])
+    err = np.abs(np.asarray(back - x))
+    blocks = err.shape[-1]
+    for b in range((n + 127) // 128):
+        e = err[..., b * 128:(b + 1) * 128].max(-1)
+        assert np.all(e <= per_block_scale[..., b] + 1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+       data=st.integers(1, 8), model=st.integers(1, 8))
+def test_sanitize_only_emits_dividing_axes(dims, data, model):
+    """INVARIANT: sanitized specs always divide the array dims."""
+    mesh = _FakeMesh(dict(data=data, model=model))
+    spec = P(*(["data", "model", ("data", "model"), None][:len(dims)]))
+    out = _sanitize(spec, tuple(dims), mesh)
+    sizes = dict(data=data, model=model)
+    for entry, dim in zip(tuple(out), dims):
+        if entry is None:
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        total = int(np.prod([sizes[nm] for nm in names]))
+        assert dim % total == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 64), f=st.integers(1, 32), c=st.integers(1, 6),
+       seed=st.integers(0, 2**30))
+def test_segment_pool_matches_ref(b, f, c, seed):
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (b, f))
+    y = jax.random.randint(jax.random.fold_in(key, 1), (b,), 0, c)
+    s1, c1 = ops.segment_pool(x, y, c)
+    s2, c2 = ref.segment_pool_ref(x, y, c)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seq=st.integers(2, 64), vocab=st.integers(8, 64),
+       seed=st.integers(0, 2**30))
+def test_token_pipeline_deterministic(seq, vocab, seed):
+    """INVARIANT: batch_at(step) is a pure function of (config, step) —
+    the property checkpoint-exact resume relies on."""
+    from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+    cfg = TokenPipelineConfig(vocab=vocab, seq_len=seq, global_batch=2, seed=seed)
+    a, b = TokenPipeline(cfg), TokenPipeline(cfg)
+    for s in (0, 3, 17):
+        np.testing.assert_array_equal(a.batch_at(s)["tokens"],
+                                      b.batch_at(s)["tokens"])
+    assert not np.array_equal(a.batch_at(0)["tokens"], a.batch_at(1)["tokens"])
