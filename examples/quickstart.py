@@ -58,6 +58,26 @@ def main() -> None:
     print(f"\nheld-out task accuracy: {np.mean(accs):.3f} "
           f"(adaptation = single forward pass)")
 
+    # 4. scale it: the TASK-BATCHED engine — many tasks per optimizer step
+    # (vmap over the task axis, per-task H draws, one AdamW update; set
+    # mesh=make_dp_mesh(n) to shard the task axis across devices).
+    from repro.core.episodic_train import make_batched_meta_train_step
+    from repro.data.episodic import task_batch_at
+    from repro.optim import AdamWConfig, adamw_init
+
+    adamw = AdamWConfig(weight_decay=0.0)
+    opt_state = adamw_init(params, adamw)
+    batched_step = jax.jit(
+        make_batched_meta_train_step(learner, lite, adamw=adamw, lr=1e-3))
+    data_key, step_key = jax.random.key(3), jax.random.key(4)
+    for step in range(20):
+        batch = task_batch_at(data_key, task_cfg, 8, step)   # 8 tasks/step
+        params, opt_state, metrics = batched_step(
+            params, opt_state, batch, jax.random.fold_in(step_key, step))
+        if step % 5 == 0:
+            print(f"batched step {step:3d}  loss {float(metrics['loss']):7.3f}"
+                  f"  acc {float(metrics['accuracy']):.2f}")
+
 
 if __name__ == "__main__":
     main()

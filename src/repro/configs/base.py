@@ -133,6 +133,24 @@ class ModelConfig:
         return _round_up(self.vocab, 2048)
 
 
+@dataclasses.dataclass(frozen=True)
+class MetaTrainConfig:
+    """Task-batched LITE meta-training knobs (repro.core.episodic_train).
+
+    tasks_per_step: tasks whose gradients are averaged into ONE optimizer
+      step (the batch-of-episodes axis; 1 reproduces paper Algorithm 1).
+    dp_shards: data-parallel shards over the task axis (shard_map); must
+      divide tasks_per_step.  1 = single-device vmap only.
+    """
+
+    tasks_per_step: int = 8
+    dp_shards: int = 1
+    lite_h: int = 8
+    lite_chunk: Optional[int] = None
+    lr: float = 1e-3
+    max_grad_norm: float = 10.0
+
+
 # -- step shapes (assigned input-shape set for LM-family archs) -------------
 
 @dataclasses.dataclass(frozen=True)

@@ -8,7 +8,7 @@ scanned over, and fed to jit'd steps directly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +27,12 @@ class Task:
       query_y:   (M,) int32 task-local labels
       way:       static number of classes (data field would break pytree
                  flattening under vmap; kept as metadata)
+      support_mask / query_mask: optional (N,)/(M,) float32 validity masks
+                 (1 = real example, 0 = collator padding).  ``None`` means
+                 "all real"; learners and the LITE estimators treat masked
+                 examples as absent, so a padded task computes the same
+                 loss/gradients as its unpadded original.  Padded support
+                 labels are -1 (one-hot maps them to the zero row).
     """
 
     support_x: jnp.ndarray
@@ -34,6 +40,8 @@ class Task:
     query_x: jnp.ndarray
     query_y: jnp.ndarray
     way: int = dataclasses.field(metadata=dict(static=True), default=5)
+    support_mask: Optional[jnp.ndarray] = None
+    query_mask: Optional[jnp.ndarray] = None
 
     @property
     def n_support(self) -> int:
@@ -44,16 +52,63 @@ class Task:
         return self.query_x.shape[0]
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TaskBatch:
+    """T tasks padded to one bucket shape and stacked on a leading task axis.
+
+    The batch is what the task-batched training engine consumes: every leaf
+    has static shape so ``vmap``/``shard_map`` over axis 0 sees one SPMD
+    program regardless of the original (ragged) task sizes.  Leaves:
+
+      support_x: (T, N, ...)   support_y: (T, N)   support_mask: (T, N)
+      query_x:   (T, M, ...)   query_y:   (T, M)   query_mask:   (T, M)
+
+    Masks are float32 validity weights (1 real / 0 padding); padded support
+    labels are -1 so one-hot aggregation drops them.  ``way`` is static and
+    shared by all tasks in the batch (the collator enforces this).
+    """
+
+    support_x: jnp.ndarray
+    support_y: jnp.ndarray
+    query_x: jnp.ndarray
+    query_y: jnp.ndarray
+    support_mask: jnp.ndarray
+    query_mask: jnp.ndarray
+    way: int = dataclasses.field(metadata=dict(static=True), default=5)
+
+    @property
+    def num_tasks(self) -> int:
+        return self.support_x.shape[0]
+
+    def task(self, i: int) -> Task:
+        """Host-side view of one member task (padding kept, masks attached)."""
+        return Task(support_x=self.support_x[i], support_y=self.support_y[i],
+                    query_x=self.query_x[i], query_y=self.query_y[i],
+                    way=self.way, support_mask=self.support_mask[i],
+                    query_mask=self.query_mask[i])
+
+
 def validate_task(task: Task) -> None:
     """Host-side invariant checks (used by tests and the data pipeline)."""
     assert task.support_x.shape[0] == task.support_y.shape[0], "support len mismatch"
     assert task.query_x.shape[0] == task.query_y.shape[0], "query len mismatch"
 
 
+def validate_task_batch(batch: TaskBatch) -> None:
+    t = batch.support_x.shape[0]
+    for leaf in (batch.support_y, batch.support_mask, batch.query_x,
+                 batch.query_y, batch.query_mask):
+        assert leaf.shape[0] == t, "task-axis length mismatch"
+    assert batch.support_mask.shape == batch.support_y.shape
+    assert batch.query_mask.shape == batch.query_y.shape
+
+
 def query_batches(task: Task, batch_size: int):
     """Split the query set into ceil(M / batch_size) padded batches plus a
     per-example weight mask (Algorithm 1's outer loop).  Returns
-    (query_x[B, Mb, ...], query_y[B, Mb], weight[B, Mb])."""
+    (query_x[B, Mb, ...], query_y[B, Mb], weight[B, Mb]).  An existing
+    ``task.query_mask`` (collator padding) folds into the weights."""
     m = task.query_x.shape[0]
     b = -(-m // batch_size)
     pad = b * batch_size - m
@@ -65,4 +120,6 @@ def query_batches(task: Task, batch_size: int):
     qx = _pad(task.query_x).reshape((b, batch_size) + task.query_x.shape[1:])
     qy = _pad(task.query_y).reshape(b, batch_size)
     w = (jnp.arange(b * batch_size) < m).astype(jnp.float32).reshape(b, batch_size)
+    if task.query_mask is not None:
+        w = w * _pad(task.query_mask).reshape(b, batch_size)
     return qx, qy, w

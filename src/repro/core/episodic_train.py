@@ -7,15 +7,28 @@ is already baked into the LITE combinator's backward.
 
     step = make_meta_train_step(learner, lite_spec, query_batch=8)
     params, opt_state, metrics = step(params, opt_state, task, key)
+
+Beyond the paper: the TASK-BATCHED engine (``make_batched_meta_train_step``)
+amortizes the per-step cost over many tasks — ``vmap`` over the task axis of
+a :class:`repro.core.episodic.TaskBatch`, per-task PRNG keys (each task draws
+its own H subset), task-mean gradients, ONE optimizer step — and optionally
+shards the task axis across devices via ``shard_map`` (pure data parallelism:
+params replicated, gradients ``pmean``-ed over the mesh axis).
+
+    batch = collate_task_batch(tasks)            # repro.data.episodic
+    step = make_batched_meta_train_step(learner, lite_spec)
+    params, opt_state, metrics = step(params, opt_state, batch, key)
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
-from repro.core.episodic import Task
+from repro.core.episodic import Task, TaskBatch, query_batches
 from repro.core.lite import LiteSpec
 from repro.core.meta_learners import MetaLearner
 from repro.optim import AdamWConfig, adamw_update, clip_by_global_norm
@@ -29,8 +42,8 @@ def make_meta_train_step(learner: MetaLearner, lite: LiteSpec,
                          lr: float = 1e-3,
                          max_grad_norm: float = 10.0) -> Callable:
     """query_batch=0 -> single query pass; >0 -> Algorithm 1's M_b loop
-    via lax.scan gradient accumulation (query count must divide evenly;
-    the data pipeline pads — see repro.core.episodic.query_batches)."""
+    via lax.scan gradient accumulation (repro.core.episodic.query_batches
+    pads the tail batch and weights it out, so any query count works)."""
 
     def loss_for(params, task: Task, key):
         return learner.meta_loss(params, task, key, lite)[0]
@@ -39,25 +52,29 @@ def make_meta_train_step(learner: MetaLearner, lite: LiteSpec,
         return jax.value_and_grad(loss_for)(params, task, key)
 
     def grads_microbatched(params, task: Task, key):
-        m = task.query_x.shape[0]
-        nb = max(m // query_batch, 1)
-        qx = task.query_x.reshape((nb, query_batch) + task.query_x.shape[1:])
-        qy = task.query_y.reshape(nb, query_batch)
+        # query_batches pads the tail batch and emits per-example weights
+        # (folding in any collator query_mask), so M need not divide evenly
+        qx, qy, qm = query_batches(task, query_batch)
 
         def body(acc, xs):
-            qxb, qyb = xs
+            qxb, qyb, qmb = xs
             sub = Task(support_x=task.support_x, support_y=task.support_y,
-                       query_x=qxb, query_y=qyb, way=task.way)
+                       query_x=qxb, query_y=qyb, way=task.way,
+                       support_mask=task.support_mask, query_mask=qmb)
             # same key => same H subset across query batches (Alg. 1
             # draws H once per task, line 4 outside the inner use)
             l, g = jax.value_and_grad(loss_for)(params, sub, key)
+            # weight each microbatch by its REAL query count so padded
+            # tails don't dilute the task loss (uniform 1/nb when unmasked)
+            wb = jnp.sum(qmb)
             loss_acc, g_acc = acc
-            return (loss_acc + l / nb,
-                    jax.tree.map(lambda a, b: a + b / nb, g_acc, g)), None
+            return (loss_acc + l * wb,
+                    jax.tree.map(lambda a, b: a + b * wb, g_acc, g)), None
 
         zero = (jnp.zeros(()), jax.tree.map(jnp.zeros_like, params))
-        (loss, grads), _ = jax.lax.scan(body, zero, (qx, qy))
-        return loss, grads
+        (loss_sum, grad_sum), _ = jax.lax.scan(body, zero, (qx, qy, qm))
+        w_tot = jnp.maximum(jnp.sum(qm), 1.0)
+        return loss_sum / w_tot, jax.tree.map(lambda a: a / w_tot, grad_sum)
 
     def step(params: PyTree, opt_state: Dict, task: Task, key
              ) -> Tuple[PyTree, Dict, Dict]:
@@ -70,3 +87,138 @@ def make_meta_train_step(learner: MetaLearner, lite: LiteSpec,
         return params, opt_state, dict(loss=loss, grad_norm=gnorm)
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# Task-batched engine: many tasks -> one optimizer step, optionally
+# data-parallel over the task axis.
+# ---------------------------------------------------------------------------
+
+
+def task_key(key: jax.Array, task_index) -> jax.Array:
+    """Per-task PRNG key convention: fold the global task index into the
+    step key.  Shared by the batched engine, its sharded path, and the
+    looped reference so all three draw identical H subsets for task i."""
+    return jax.random.fold_in(key, task_index)
+
+
+def make_batched_meta_grads(learner: MetaLearner, lite: LiteSpec) -> Callable:
+    """(params, batch: TaskBatch, key) -> (loss, accuracy, grads).
+
+    ``vmap``s ``learner.meta_loss`` over the task axis with per-task keys
+    (``task_key(key, i)`` — each task draws an independent H subset) and
+    returns task-MEAN loss/accuracy/gradients.  The gradient is taken of
+    the task-mean loss directly (one shared-parameter backward, peak
+    gradient memory O(P)) rather than stacking T per-task gradient pytrees
+    and averaging them.  An optional ``ids`` argument overrides the global
+    task indices, which the data-parallel path uses so shard-local slots
+    keep their global key.
+    """
+
+    def grads_fn(params: PyTree, batch: TaskBatch, key,
+                 ids: Optional[jnp.ndarray] = None):
+        if ids is None:
+            ids = jnp.arange(batch.num_tasks)
+
+        def batch_loss(p):
+            def one_task(sx, sy, sm, qx, qy, qm, i):
+                task = Task(support_x=sx, support_y=sy, query_x=qx,
+                            query_y=qy, way=batch.way, support_mask=sm,
+                            query_mask=qm)
+                loss, aux = learner.meta_loss(p, task, task_key(key, i), lite)
+                return loss, aux["accuracy"]
+
+            losses, accs = jax.vmap(one_task)(
+                batch.support_x, batch.support_y, batch.support_mask,
+                batch.query_x, batch.query_y, batch.query_mask, ids)
+            return jnp.mean(losses), jnp.mean(accs)
+
+        (loss, acc), grads = jax.value_and_grad(batch_loss, has_aux=True)(
+            params)
+        return loss, acc, grads
+
+    return grads_fn
+
+
+def make_batched_meta_train_step(learner: MetaLearner, lite: LiteSpec,
+                                 adamw: AdamWConfig = AdamWConfig(weight_decay=0.0),
+                                 lr: float = 1e-3,
+                                 max_grad_norm: float = 10.0,
+                                 mesh=None, dp_axis: str = "data") -> Callable:
+    """Task-batched meta-training step: T tasks -> ONE AdamW step.
+
+        step(params, opt_state, batch: TaskBatch, key)
+            -> (params, opt_state, metrics)
+
+    Without a mesh the whole batch is vmapped on the local device.  With
+    ``mesh`` (whose ``dp_axis`` has size S > 1) the task axis is sharded
+    S-ways via ``shard_map``: params/opt state replicated, each shard
+    differentiates its T/S tasks, gradients are ``pmean``-ed across the
+    axis, and every shard applies the identical optimizer update — so the
+    result is bit-comparable to the single-device batched step.
+    ``batch.num_tasks`` must be divisible by S.
+    """
+    grads_fn = make_batched_meta_grads(learner, lite)
+
+    def apply_update(params, opt_state, loss, acc, grads):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        params, opt_state = adamw_update(params, grads, opt_state, lr, adamw)
+        return params, opt_state, dict(loss=loss, accuracy=acc,
+                                       grad_norm=gnorm)
+
+    if mesh is not None and dp_axis not in dict(mesh.shape):
+        raise ValueError(f"mesh axes {tuple(dict(mesh.shape))} lack "
+                         f"dp_axis={dp_axis!r}")
+    dp = 1 if mesh is None else dict(mesh.shape)[dp_axis]
+    if dp == 1:
+        def step(params: PyTree, opt_state: Dict, batch: TaskBatch, key
+                 ) -> Tuple[PyTree, Dict, Dict]:
+            loss, acc, grads = grads_fn(params, batch, key)
+            return apply_update(params, opt_state, loss, acc, grads)
+
+        return step
+
+    from repro.sharding import shard_map
+
+    def step(params: PyTree, opt_state: Dict, batch: TaskBatch, key
+             ) -> Tuple[PyTree, Dict, Dict]:
+        t = batch.num_tasks
+        if t % dp:
+            raise ValueError(f"tasks_per_step={t} not divisible by "
+                             f"dp_shards={dp}")
+        ids = jnp.arange(t)
+        # raw uint32 key data crosses the shard_map boundary (extended
+        # key dtypes and partitioning don't mix on all jax versions)
+        key_data = jax.random.key_data(key)
+
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(), P(), P(dp_axis), P(), P(dp_axis)),
+            out_specs=(P(), P(), P()), check_rep=False)
+        def sharded(params, opt_state, local_batch, key_data, local_ids):
+            key = jax.random.wrap_key_data(key_data)
+            loss, acc, grads = grads_fn(params, local_batch, key, local_ids)
+            loss = jax.lax.pmean(loss, dp_axis)
+            acc = jax.lax.pmean(acc, dp_axis)
+            grads = jax.lax.pmean(grads, dp_axis)
+            return apply_update(params, opt_state, loss, acc, grads)
+
+        return sharded(params, opt_state, batch, key_data, ids)
+
+    return step
+
+
+def run_looped_baseline(learner: MetaLearner, lite: LiteSpec,
+                        params: PyTree, opt_state: Dict, tasks, key,
+                        adamw: AdamWConfig = AdamWConfig(weight_decay=0.0),
+                        lr: float = 1e-3, max_grad_norm: float = 10.0):
+    """Paper Algorithm 1 verbatim: one optimizer step PER task, in a Python
+    loop.  The throughput baseline ``benchmarks/task_throughput.py`` compares
+    the batched engine against; uses the same per-task key convention."""
+    step = jax.jit(make_meta_train_step(learner, lite, adamw=adamw, lr=lr,
+                                        max_grad_norm=max_grad_norm))
+    metrics = None
+    for i, task in enumerate(tasks):
+        params, opt_state, metrics = step(params, opt_state, task,
+                                          task_key(key, i))
+    return params, opt_state, metrics

@@ -71,33 +71,64 @@ class LiteSpec:
 
 
 def sample_stratified_indices(key: jax.Array, ys: jnp.ndarray,
-                              num_classes: int, h: int) -> jnp.ndarray:
+                              num_classes: int, h: int,
+                              mask: jnp.ndarray | None = None) -> jnp.ndarray:
     """h indices with >= 1 example per class when h >= num_classes (the
     guarantee the paper's sub-sampled-task baseline uses, App. D.4 — a
     class with zero samples would make the naive baseline's class
-    statistics singular).  Random within-class ranks break ties."""
+    statistics singular).
+
+    Built on the same per-index scores as ``sample_h_indices``: each
+    example's within-class rank comes from ordering the class by its
+    (key, index)-only uniforms, so — like the LITE draw — a task padded to
+    a larger bucket selects the identical subset (padded rows contribute
+    zero to every class count and rank strictly last)."""
     n = ys.shape[0]
-    k1, k2 = jax.random.split(key)
-    perm = jax.random.permutation(k1, n)
-    y_p = ys[perm]
-    onehot = jax.nn.one_hot(y_p, num_classes, dtype=jnp.float32)
-    rank = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1.0,
-                               y_p[:, None], axis=1)[:, 0]
-    score = rank + 0.5 * jax.random.uniform(k2, (n,))
-    order = jnp.argsort(score)
-    return perm[order[:h]]
+    u = _index_scores(key, n)
+    order = jnp.argsort(u)
+    onehot_sorted = jax.nn.one_hot(ys[order], num_classes, dtype=jnp.float32)
+    if mask is not None:
+        onehot_sorted = onehot_sorted * mask[order][:, None]
+    # rank of each row within its class when the class is ordered by u
+    rank_sorted = jnp.sum(jnp.cumsum(onehot_sorted, axis=0) * onehot_sorted,
+                          axis=1) - 1.0
+    scores = jnp.zeros((n,)).at[order].set(rank_sorted + 0.5 * u[order])
+    if mask is not None:
+        scores = scores + 2.0 * n * (1.0 - mask)
+    return jnp.argsort(scores)[:h]
 
 
-def sample_h_indices(key: jax.Array, n: int, h: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def _index_scores(key: jax.Array, n: int) -> jnp.ndarray:
+    """Per-index uniform scores depending only on (key, index).
+
+    Built from ``fold_in`` per index rather than one shaped draw so the
+    score of index i is invariant to n — a task padded to a larger bucket
+    scores its real examples identically and therefore draws the same H
+    subset (the padding-invariance the task-batch collator relies on).
+    """
+    return jax.vmap(
+        lambda i: jax.random.uniform(jax.random.fold_in(key, i)))(jnp.arange(n))
+
+
+def sample_h_indices(key: jax.Array, n: int, h: int,
+                     mask: jnp.ndarray | None = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Sample H distinct indices uniformly (without replacement) and return
     (h_idx[h], comp_idx[n-h]).
 
     Sampling *without* replacement matches the paper's Algorithm 1 line 4 in
     the regime H <= N and keeps the estimator unbiased (each index has equal
     marginal inclusion probability H/N, and the N/H rescaling corrects it).
+    Ranking per-index scores yields the uniform permutation; with ``mask``
+    (1 real / 0 padding) padded slots rank strictly after every real slot,
+    so H fills with real examples first and the draw matches the unpadded
+    task's draw index-for-index.
     """
-    perm = jax.random.permutation(key, n)
-    return perm[:h], perm[h:]
+    scores = _index_scores(key, n)
+    if mask is not None:
+        scores = scores + 2.0 * (1.0 - mask)
+    order = jnp.argsort(scores)
+    return order[:h], order[h:]
 
 
 def straight_through(full_value: PyTree, grad_value: PyTree, scale) -> PyTree:
@@ -155,8 +186,21 @@ def _chunked_nograd_sum(encode_fn: EncodeFn, frozen_params: PyTree, xs: PyTree,
     return jax.tree.map(lambda p: jnp.sum(p, axis=0), partials)
 
 
+def _masked_encode(encode_fn: EncodeFn) -> EncodeFn:
+    """Wrap encode_fn to take (inputs, mask) and zero-weight masked rows."""
+
+    def enc(params, xm):
+        xs, m = xm
+        e = encode_fn(params, xs)
+        return jax.tree.map(
+            lambda t: t * m.reshape((-1,) + (1,) * (t.ndim - 1)).astype(t.dtype),
+            e)
+
+    return enc
+
+
 def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
-             spec: LiteSpec) -> PyTree:
+             spec: LiteSpec, mask: jnp.ndarray | None = None) -> PyTree:
     """LITE estimator of ``sum_n encode_fn(params, x_n)`` (paper Eq. 8).
 
     Forward value: exact sum over all N examples.
@@ -169,36 +213,68 @@ def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
       xs: pytree of support inputs, leading axis N on every leaf.
       key: PRNG key for the H subset draw.
       spec: LiteSpec.
+      mask: optional (N,) validity weights (1 real / 0 collator padding).
+        Padded rows contribute nothing to forward or backward; the N/H
+        rescale uses the REAL count, so a padded task batch reproduces the
+        unpadded task's estimator exactly.  When fewer than H real examples
+        exist, every real example lands in H and the gradient is exact
+        (scale 1).
 
     Returns:
       Pytree of summed encodings (leading axis reduced).
     """
     n = jax.tree.leaves(xs)[0].shape[0]
     h = spec.resolved_h(n)
+    if mask is None:
+        if spec.exact or h >= n:
+            enc = encode_fn(params, xs)
+            return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
+
+        h_idx, comp_idx = sample_h_indices(key, n, h)
+        take = lambda a, i: jnp.take(a, i, axis=0)
+        xs_h = jax.tree.map(partial(take, i=h_idx), xs)
+        xs_c = jax.tree.map(partial(take, i=comp_idx), xs)
+
+        # Differentiable pass over H (single batch — |H| is small by
+        # construction).
+        enc_h = encode_fn(params, xs_h)
+        sum_h = jax.tree.map(lambda e: jnp.sum(e, axis=0), enc_h)
+
+        # No-grad pass over the complement, chunked.
+        frozen = tree_stop_gradient(params)
+        sum_c = _chunked_nograd_sum(encode_fn, frozen, xs_c, spec.chunk_size)
+
+        full = jax.tree.map(lambda a, b: jax.lax.stop_gradient(a + b),
+                            sum_h, sum_c)
+        return straight_through(full, sum_h, n / h)
+
+    enc_w = _masked_encode(encode_fn)
     if spec.exact or h >= n:
-        enc = encode_fn(params, xs)
+        enc = enc_w(params, (xs, mask))
         return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
 
-    h_idx, comp_idx = sample_h_indices(key, n, h)
+    h_idx, comp_idx = sample_h_indices(key, n, h, mask)
     take = lambda a, i: jnp.take(a, i, axis=0)
-    xs_h = jax.tree.map(partial(take, i=h_idx), xs)
-    xs_c = jax.tree.map(partial(take, i=comp_idx), xs)
+    xm_h = (jax.tree.map(partial(take, i=h_idx), xs), mask[h_idx])
+    xm_c = (jax.tree.map(partial(take, i=comp_idx), xs), mask[comp_idx])
 
-    # Differentiable pass over H (single batch — |H| is small by construction).
-    enc_h = encode_fn(params, xs_h)
+    enc_h = enc_w(params, xm_h)
     sum_h = jax.tree.map(lambda e: jnp.sum(e, axis=0), enc_h)
 
-    # No-grad pass over the complement, chunked.
     frozen = tree_stop_gradient(params)
-    sum_c = _chunked_nograd_sum(encode_fn, frozen, xs_c, spec.chunk_size)
+    sum_c = _chunked_nograd_sum(enc_w, frozen, xm_c, spec.chunk_size)
 
-    full = jax.tree.map(lambda a, b: jax.lax.stop_gradient(a + b), sum_h, sum_c)
-    return straight_through(full, sum_h, n / h)
+    full = jax.tree.map(lambda a, b: jax.lax.stop_gradient(a + b),
+                        sum_h, sum_c)
+    n_real = jnp.sum(mask)
+    scale = n_real / jnp.minimum(float(h), jnp.maximum(n_real, 1.0))
+    return straight_through(full, sum_h, scale)
 
 
 def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
                      ys: jnp.ndarray, num_classes: int, key: jax.Array,
-                     spec: LiteSpec) -> Tuple[PyTree, jnp.ndarray]:
+                     spec: LiteSpec, mask: jnp.ndarray | None = None
+                     ) -> Tuple[PyTree, jnp.ndarray]:
     """LITE estimator of per-class sums  S_c = sum_n 1(y_n = c) e(x_n).
 
     Needed by metric heads (ProtoNets prototypes, Simple CNAPs class
@@ -211,6 +287,10 @@ def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
     """
     n = jax.tree.leaves(xs)[0].shape[0]
     onehot_all = jax.nn.one_hot(ys, num_classes, dtype=jnp.float32)  # (N, C)
+    if mask is not None:
+        # padded labels are -1 (already a zero one-hot row); the explicit
+        # product keeps counts exact even if a collator pads with 0..way-1
+        onehot_all = onehot_all * mask[:, None]
     counts = jnp.sum(onehot_all, axis=0)  # exact
 
     def seg_encode(p, batch):
@@ -220,7 +300,7 @@ def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
             lambda e: jnp.einsum("b...,bc->bc...", e.astype(jnp.float32), onehot), enc
         )
 
-    sums = lite_sum(seg_encode, params, (xs, onehot_all), key, spec)
+    sums = lite_sum(seg_encode, params, (xs, onehot_all), key, spec, mask=mask)
     return sums, counts
 
 
@@ -238,17 +318,30 @@ def lite_value_and_grad(loss_fn: Callable, argnums: int = 0):
 
 
 def subsampled_task_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
-                        key: jax.Array, spec: LiteSpec) -> PyTree:
+                        key: jax.Array, spec: LiteSpec,
+                        mask: jnp.ndarray | None = None) -> PyTree:
     """Forward and backward both restricted to the H subset, rescaled by N/H
     so the *expected forward value* matches the full sum.  Unbiased in value
     but — unlike LITE — the downstream L'(e) factor is evaluated at a noisy
     encoding, which is what inflates its gradient RMSE (paper Fig. 4)."""
     n = jax.tree.leaves(xs)[0].shape[0]
     h = spec.resolved_h(n)
+    if mask is None:
+        if spec.exact or h >= n:
+            enc = encode_fn(params, xs)
+            return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
+        h_idx, _ = sample_h_indices(key, n, h)
+        xs_h = jax.tree.map(lambda a: jnp.take(a, h_idx, axis=0), xs)
+        enc = encode_fn(params, xs_h)
+        return jax.tree.map(lambda e: (n / h) * jnp.sum(e, axis=0), enc)
+
+    enc_w = _masked_encode(encode_fn)
     if spec.exact or h >= n:
-        enc = encode_fn(params, xs)
+        enc = enc_w(params, (xs, mask))
         return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
-    h_idx, _ = sample_h_indices(key, n, h)
-    xs_h = jax.tree.map(lambda a: jnp.take(a, h_idx, axis=0), xs)
-    enc = encode_fn(params, xs_h)
-    return jax.tree.map(lambda e: (n / h) * jnp.sum(e, axis=0), enc)
+    h_idx, _ = sample_h_indices(key, n, h, mask)
+    enc = enc_w(params, (jax.tree.map(lambda a: jnp.take(a, h_idx, axis=0), xs),
+                         mask[h_idx]))
+    n_real = jnp.sum(mask)
+    scale = n_real / jnp.minimum(float(h), jnp.maximum(n_real, 1.0))
+    return jax.tree.map(lambda e: scale * jnp.sum(e, axis=0), enc)

@@ -68,13 +68,24 @@ class MetaLearner:
     predict: Callable[[PyTree, PyTree, jnp.ndarray], jnp.ndarray]
 
 
-def _xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray,
+          w: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Cross-entropy; with ``w`` (validity weights) a weighted mean over the
+    real examples only, so collator padding never moves the loss."""
     logp = jax.nn.log_softmax(logits, axis=-1)
-    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if w is None:
+        return -jnp.mean(ll)
+    w = w.astype(ll.dtype)
+    return -jnp.sum(ll * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
-def _accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
-    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+def _accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
+              w: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    hit = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+    if w is None:
+        return jnp.mean(hit)
+    return jnp.sum(hit * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
 # ===========================================================================
@@ -85,10 +96,12 @@ def make_protonets(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
     def init(key):
         return dict(bb=bb.init(key))
 
-    def _prototypes(params, sx, sy, key, lite: LiteSpec, estimator=lite_segment_sum):
+    def _prototypes(params, sx, sy, key, lite: LiteSpec,
+                    estimator=lite_segment_sum, mask=None):
         def encode(p, x):
             return bb.features(p, x, None)
-        sums, counts = estimator(encode, params["bb"], sx, sy, cfg.way, key, lite)
+        sums, counts = estimator(encode, params["bb"], sx, sy, cfg.way, key,
+                                 lite, mask=mask)
         return sums / jnp.maximum(counts, 1.0)[:, None]
 
     def _logits(params, protos, qx):
@@ -99,10 +112,11 @@ def make_protonets(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
     def meta_loss(params, task: Task, key, lite: LiteSpec, estimator=None):
         seg = _sub_seg if estimator == "subsampled" else lite_segment_sum
         protos = _prototypes(params, task.support_x, task.support_y, key,
-                             lite, seg)
+                             lite, seg, mask=task.support_mask)
         logits = _logits(params, protos, task.query_x)
-        loss = _xent(logits, task.query_y)
-        return loss, dict(accuracy=_accuracy(logits, task.query_y))
+        loss = _xent(logits, task.query_y, task.query_mask)
+        return loss, dict(
+            accuracy=_accuracy(logits, task.query_y, task.query_mask))
 
     def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
         key = jax.random.key(0) if key is None else key
@@ -148,17 +162,18 @@ def _make_cnaps_family(cfg: MetaLearnerConfig, bb: BackboneDef,
             )
         return p
 
-    def _task_embedding(params, sx, key, lite: LiteSpec, estimator=lite_sum):
-        n = sx.shape[0]
+    def _task_embedding(params, sx, key, lite: LiteSpec, estimator=lite_sum,
+                        mask=None):
+        n = sx.shape[0] if mask is None else jnp.maximum(jnp.sum(mask), 1.0)
 
         def enc(p, x):
             return encode_set(p, x, set_cfg)
 
-        z_sum = estimator(enc, params["enc"], sx, key, lite)
+        z_sum = estimator(enc, params["enc"], sx, key, lite, mask=mask)
         return z_sum / n
 
     def _class_stats(params, film, sx, sy, key, lite: LiteSpec,
-                     estimator=lite_segment_sum):
+                     estimator=lite_segment_sum, mask=None):
         def encode(pf, x):
             bbp, f = pf
             feat = bb.features(bbp, x, f).astype(jnp.float32)
@@ -168,16 +183,18 @@ def _make_cnaps_family(cfg: MetaLearnerConfig, bb: BackboneDef,
             return dict(feat=feat)
 
         pf = _film_as_params(bb, params["bb"], film)
-        sums, counts = estimator(encode, pf, sx, sy, cfg.way, key, lite)
+        sums, counts = estimator(encode, pf, sx, sy, cfg.way, key, lite,
+                                 mask=mask)
         return sums, counts
 
     def _configure(params, sx, sy, key, lite: LiteSpec,
-                   sum_estimator=lite_sum, seg_estimator=lite_segment_sum):
+                   sum_estimator=lite_sum, seg_estimator=lite_segment_sum,
+                   mask=None):
         """Support set -> task_state (film + head statistics)."""
-        z = _task_embedding(params, sx, key, lite, sum_estimator)
+        z = _task_embedding(params, sx, key, lite, sum_estimator, mask=mask)
         film = generate_film_params(params["film_gen"], z)
         sums, counts = _class_stats(params, film, sx, sy, key, lite,
-                                    seg_estimator)
+                                    seg_estimator, mask=mask)
         k_c = jnp.maximum(counts, 1.0)
         mu = sums["feat"] / k_c[:, None]                       # (C, F)
         state = dict(film=film, mu=mu)
@@ -222,10 +239,11 @@ def _make_cnaps_family(cfg: MetaLearnerConfig, bb: BackboneDef,
         sum_est = _sub_sum if estimator == "subsampled" else lite_sum
         seg_est = _sub_seg if estimator == "subsampled" else lite_segment_sum
         state = _configure(params, task.support_x, task.support_y, key, lite,
-                           sum_est, seg_est)
+                           sum_est, seg_est, mask=task.support_mask)
         logits = _logits(params, state, task.query_x)
-        loss = _xent(logits, task.query_y)
-        return loss, dict(accuracy=_accuracy(logits, task.query_y))
+        loss = _xent(logits, task.query_y, task.query_mask)
+        return loss, dict(
+            accuracy=_accuracy(logits, task.query_y, task.query_mask))
 
     def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
         key = jax.random.key(0) if key is None else key
@@ -238,31 +256,35 @@ def _make_cnaps_family(cfg: MetaLearnerConfig, bb: BackboneDef,
 
 
 # naive small-task estimators (paper's Fig-4 baseline) with matching signatures
-def _sub_sum(encode_fn, params, xs, key, spec):
-    return subsampled_task_sum(encode_fn, params, xs, key, spec)
+def _sub_sum(encode_fn, params, xs, key, spec, mask=None):
+    return subsampled_task_sum(encode_fn, params, xs, key, spec, mask=mask)
 
 
-def _sub_seg(encode_fn, params, xs, ys, num_classes, key, spec):
+def _sub_seg(encode_fn, params, xs, ys, num_classes, key, spec, mask=None):
     """Naive small-task baseline with class-stratified subsampling (paper
     App. D.4 guarantees >=1 example/class so class statistics stay
     finite).  Forward AND backward see only the subset."""
     from repro.core.lite import sample_stratified_indices
     n = jax.tree.leaves(xs)[0].shape[0]
     h = spec.resolved_h(n)
+    w = jnp.ones((n,), jnp.float32) if mask is None else mask
+    n_real = n if mask is None else jnp.sum(mask)
     if spec.exact or h >= n:
         idx = jnp.arange(n)
         scale = 1.0
     else:
-        idx = sample_stratified_indices(key, ys, num_classes, h)
-        scale = n / h
+        idx = sample_stratified_indices(key, ys, num_classes, h, mask=mask)
+        scale = n_real / jnp.minimum(float(h), jnp.maximum(n_real, 1.0))
     take = lambda a: jnp.take(a, idx, axis=0)
     xs_h = jax.tree.map(take, xs)
-    onehot_h = jax.nn.one_hot(ys[idx], num_classes, dtype=jnp.float32)
+    onehot_h = jax.nn.one_hot(ys[idx], num_classes, dtype=jnp.float32) \
+        * w[idx][:, None]
     enc = encode_fn(params, xs_h)
     sums = jax.tree.map(
         lambda e: scale * jnp.einsum("b...,bc->c...",
                                      e.astype(jnp.float32), onehot_h), enc)
-    counts = jnp.sum(jax.nn.one_hot(ys, num_classes, dtype=jnp.float32), axis=0)
+    counts = jnp.sum(jax.nn.one_hot(ys, num_classes, dtype=jnp.float32)
+                     * w[:, None], axis=0)
     return sums, counts
 
 
@@ -283,9 +305,9 @@ def make_fomaml(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
         f = bb.features(p["bb"], x, None).astype(jnp.float32)
         return f @ p["head"]["w"] + p["head"]["b"]
 
-    def _inner_adapt(params, sx, sy):
+    def _inner_adapt(params, sx, sy, sw=None):
         def inner_loss(p):
-            return _xent(_logits_p(p, sx), sy)
+            return _xent(_logits_p(p, sx), sy, sw)
 
         p = params
         for _ in range(cfg.inner_steps):
@@ -295,13 +317,15 @@ def make_fomaml(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
 
     def meta_loss(params, task: Task, key, lite: LiteSpec, estimator=None):
         del key, lite, estimator
-        adapted = _inner_adapt(params, task.support_x, task.support_y)
+        adapted = _inner_adapt(params, task.support_x, task.support_y,
+                               task.support_mask)
         # first-order: treat the adapted point as a constant offset
         adapted = jax.tree.map(
             lambda a, b: a + jax.lax.stop_gradient(b - a), params, adapted)
         logits = _logits_p(adapted, task.query_x)
-        loss = _xent(logits, task.query_y)
-        return loss, dict(accuracy=_accuracy(logits, task.query_y))
+        loss = _xent(logits, task.query_y, task.query_mask)
+        return loss, dict(
+            accuracy=_accuracy(logits, task.query_y, task.query_mask))
 
     def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
         return _inner_adapt(params, sx, sy)
@@ -322,14 +346,15 @@ def make_finetuner(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
     def init(key):
         return dict(bb=bb.init(key))
 
-    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
+    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True),
+              sw=None):
         feats = bb.features(tree_stop_gradient(params["bb"]), sx, None)
         feats = jax.lax.stop_gradient(feats).astype(jnp.float32)
         head = dict(w=jnp.zeros((fdim, cfg.way)), b=jnp.zeros((cfg.way,)))
 
         def loss(h):
             logits = feats @ h["w"] + h["b"]
-            return _xent(logits, sy)
+            return _xent(logits, sy, sw)
 
         def body(h, _):
             g = jax.grad(loss)(h)
@@ -343,10 +368,11 @@ def make_finetuner(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
         return qf @ head["w"] + head["b"]
 
     def meta_loss(params, task: Task, key, lite: LiteSpec, estimator=None):
-        head = adapt(params, task.support_x, task.support_y)
+        head = adapt(params, task.support_x, task.support_y,
+                     sw=task.support_mask)
         logits = predict(params, head, task.query_x)
-        return _xent(logits, task.query_y), dict(
-            accuracy=_accuracy(logits, task.query_y))
+        return _xent(logits, task.query_y, task.query_mask), dict(
+            accuracy=_accuracy(logits, task.query_y, task.query_mask))
 
     return MetaLearner(cfg, bb, init, meta_loss, adapt, predict)
 

@@ -12,13 +12,14 @@ sequences sample iid from it.  Used by the episodic-LM integration.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Tuple
+import functools
+from typing import Iterator, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.episodic import Task
+from repro.core.episodic import Task, TaskBatch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +59,101 @@ def image_task_stream(key: jax.Array, cfg: EpisodicImageConfig) -> Iterator[Task
     while True:
         key, sub = jax.random.split(key)
         yield sample_image_task(sub, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Task-batch collation (the task-batched engine's input side)
+# ---------------------------------------------------------------------------
+
+
+def bucket_size(n: int, multiple: int = 8) -> int:
+    """Round n up to the next bucket boundary.  Bucketing the pad targets
+    keeps the number of distinct compiled shapes small when task sizes vary
+    stream-to-stream (each (support, query) bucket pair is one XLA program)."""
+    return max(((n + multiple - 1) // multiple) * multiple, multiple)
+
+
+def collate_task_batch(tasks: Sequence[Task],
+                       support_size: Optional[int] = None,
+                       query_size: Optional[int] = None,
+                       bucket_multiple: int = 0) -> TaskBatch:
+    """Stack ragged tasks into one static-shape :class:`TaskBatch`.
+
+    Support/query sets are right-padded to a common length (the batch max,
+    an explicit ``support_size``/``query_size``, or the batch max rounded to
+    ``bucket_multiple``) and validity masks record which rows are real.
+    Padded support labels are -1 — the zero row of ``one_hot`` — so class
+    sums/counts never see them; padded query labels are 0 and only the mask
+    keeps them out of the loss.  All tasks must share ``way``.
+    """
+    if not tasks:
+        raise ValueError("collate_task_batch needs at least one task")
+    way = tasks[0].way
+    if any(t.way != way for t in tasks):
+        raise ValueError("all tasks in a batch must share `way`")
+
+    # An explicit support_size/query_size is a fixed-compiled-shape
+    # contract: it is used EXACTLY, and tasks that overflow it raise rather
+    # than silently emitting a new shape.  Without one, the pad target is
+    # the batch max, optionally rounded up to bucket_multiple.
+    def target(actual: int, explicit: Optional[int], kind: str) -> int:
+        if explicit is not None:
+            if actual > explicit:
+                raise ValueError(f"task {kind} size {actual} exceeds bucket "
+                                 f"{kind}_size={explicit}")
+            return explicit
+        return bucket_size(actual, bucket_multiple) if bucket_multiple else actual
+
+    n = target(max(t.n_support for t in tasks), support_size, "support")
+    m = target(max(t.n_query for t in tasks), query_size, "query")
+
+    def pad_rows(a: np.ndarray, rows: int, fill) -> np.ndarray:
+        a = np.asarray(a)
+        cfg = [(0, rows - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+        return np.pad(a, cfg, constant_values=fill)
+
+    def mask_rows(real: int, rows: int) -> np.ndarray:
+        return (np.arange(rows) < real).astype(np.float32)
+
+    return TaskBatch(
+        support_x=jnp.asarray(np.stack(
+            [pad_rows(t.support_x, n, 0) for t in tasks])),
+        support_y=jnp.asarray(np.stack(
+            [pad_rows(t.support_y, n, -1) for t in tasks])),
+        support_mask=jnp.asarray(np.stack(
+            [mask_rows(t.n_support, n) for t in tasks])),
+        query_x=jnp.asarray(np.stack(
+            [pad_rows(t.query_x, m, 0) for t in tasks])),
+        query_y=jnp.asarray(np.stack(
+            [pad_rows(t.query_y, m, 0) for t in tasks])),
+        query_mask=jnp.asarray(np.stack(
+            [mask_rows(t.n_query, m) for t in tasks])),
+        way=way,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def sample_image_task_batch(key: jax.Array, cfg: EpisodicImageConfig,
+                            num_tasks: int) -> TaskBatch:
+    """vmapped synthetic sampler: num_tasks equally-shaped tasks as one
+    TaskBatch (all-ones masks — no padding needed on the synthetic stream).
+    Jitted (cfg/num_tasks static), so per-step data generation compiles
+    once instead of re-tracing op-by-op in the training loop."""
+    tasks = jax.vmap(lambda k: sample_image_task(k, cfg))(
+        jax.random.split(key, num_tasks))
+    ones = lambda a: jnp.ones(a.shape[:2], jnp.float32)
+    return TaskBatch(support_x=tasks.support_x, support_y=tasks.support_y,
+                     query_x=tasks.query_x, query_y=tasks.query_y,
+                     support_mask=ones(tasks.support_y),
+                     query_mask=ones(tasks.query_y), way=cfg.way)
+
+
+def task_batch_at(key: jax.Array, cfg: EpisodicImageConfig,
+                  tasks_per_step: int, step: int) -> TaskBatch:
+    """Deterministic batch-for-step: a pure function of (key, cfg, step) —
+    the contract repro.train.loop relies on for checkpoint-exact restarts."""
+    return sample_image_task_batch(jax.random.fold_in(key, step), cfg,
+                                   tasks_per_step)
 
 
 @dataclasses.dataclass(frozen=True)

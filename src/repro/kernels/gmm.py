@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.tpu_compat import CompilerParams
+
 
 def _kernel(x_ref, w_ref, o_ref, acc_ref):
     di = pl.program_id(3)
@@ -53,7 +55,7 @@ def gmm(x: jnp.ndarray, w: jnp.ndarray, *, block_c: int = 128,
                                lambda ei, ci, fi, di: (ei, ci, fi)),
         out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.tpu_compat import CompilerParams
+
 
 def _kernel(onehot_ref, x_ref, o_ref, *, block_b: int, n_rows: int):
     bi = pl.program_id(1)
@@ -51,7 +53,7 @@ def segment_pool(x: jnp.ndarray, labels: jnp.ndarray, num_classes: int, *,
         ],
         out_specs=pl.BlockSpec((num_classes, block_f), lambda fi, bi: (0, fi)),
         out_shape=jax.ShapeDtypeStruct((num_classes, f), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(onehot, x)

@@ -1,0 +1,11 @@
+"""Version tolerance for the Pallas TPU compiler-params dataclass.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; depending
+on the installed jax exactly one of the two names exists.  Kernels import
+``CompilerParams`` from here so they lower on either side of the rename.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -27,3 +27,15 @@ def make_test_mesh():
     """Whatever devices exist (usually 1 CPU) as a (data, model)=(n, 1) mesh."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_dp_mesh(shards: int, axis: str = "data"):
+    """1-D data-parallel mesh over the first ``shards`` devices (the
+    task-batched meta-training engine shards the task axis over it)."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    if shards > len(devices):
+        raise ValueError(f"dp_shards={shards} but only {len(devices)} devices")
+    return Mesh(np.asarray(devices[:shards]), (axis,))

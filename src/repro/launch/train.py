@@ -8,6 +8,14 @@ initializes from the TPU environment); on this container it runs the
 reduced smoke config on the local device so the full control path —
 sharded state init, fault-tolerant loop, checkpoint/auto-resume,
 straggler monitoring — is exercised end to end.
+
+``--episodic`` switches to the paper's workload: task-batched LITE
+meta-training (repro.core.episodic_train) on the synthetic episodic image
+stream, with ``--tasks-per-step`` tasks per optimizer step and the task
+axis optionally sharded over ``--dp-shards`` devices:
+
+    PYTHONPATH=src python -m repro.launch.train --episodic \
+        --steps 100 --tasks-per-step 8 --dp-shards 1
 """
 from __future__ import annotations
 
@@ -18,16 +26,80 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
-from repro.configs.base import SHAPES_BY_NAME
+from repro.configs.base import SHAPES_BY_NAME, MetaTrainConfig
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig
-from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.launch.mesh import (make_dp_mesh, make_production_mesh,
+                               make_test_mesh)
 from repro.optim.schedules import cosine_schedule, wsd_schedule
 from repro.sharding import rules
 from repro.sharding.ctx import P
 from repro.train.checkpoint import CheckpointManager
 from repro.train.loop import train
-from repro.train.step import adamw_for, make_init_state, make_train_step
+from repro.train.step import (adamw_for, make_episodic_init_state,
+                              make_episodic_train_step, make_init_state,
+                              make_train_step)
+
+
+def run_episodic(args) -> None:
+    from repro.core.lite import LiteSpec
+    from repro.core.meta_learners import MetaLearnerConfig, make_learner
+    from repro.core.set_encoder import SetEncoderConfig
+    from repro.data.episodic import EpisodicImageConfig, task_batch_at
+    from repro.models.conv_backbone import (ConvBackboneConfig,
+                                            make_conv_backbone)
+    from repro.optim import AdamWConfig
+
+    if args.schedule is not None:
+        print(f"[warn] --schedule {args.schedule} is ignored by --episodic "
+              f"(constant lr {args.peak_lr}); LR schedules are an open item")
+    meta = MetaTrainConfig(tasks_per_step=args.tasks_per_step,
+                           dp_shards=args.dp_shards, lr=args.peak_lr)
+    mesh = make_dp_mesh(meta.dp_shards) if meta.dp_shards > 1 else None
+    print(f"episodic meta-training: learner={args.learner} "
+          f"tasks_per_step={meta.tasks_per_step} dp_shards={meta.dp_shards} "
+          f"devices={len(jax.devices())}")
+
+    backbone = make_conv_backbone(ConvBackboneConfig(widths=(16, 32),
+                                                     feature_dim=64))
+    learner = make_learner(
+        MetaLearnerConfig(kind=args.learner, way=5),
+        backbone,
+        SetEncoderConfig(kind="conv", conv_blocks=2, conv_width=16,
+                         task_dim=32))
+    lite = LiteSpec(h=meta.lite_h, chunk_size=meta.lite_chunk)
+    adamw = AdamWConfig(weight_decay=0.0)
+
+    init = make_episodic_init_state(learner, adamw)
+    step = make_episodic_train_step(learner, lite, meta, adamw, mesh=mesh)
+    state = init(jax.random.key(0))
+    state_abs = jax.eval_shape(init, jax.random.key(0))
+
+    tcfg = EpisodicImageConfig(way=5, shot=10, query_per_class=6,
+                               image_size=args.image_size)
+    data_key = jax.random.key(17)
+    step_key = jax.random.key(23)
+
+    def batch_at(s):
+        return dict(tasks=task_batch_at(data_key, tcfg, meta.tasks_per_step, s),
+                    key=jax.random.fold_in(step_key, s))
+
+    # distinct default dir per workload AND per learner: restoring a
+    # checkpoint into a different state template is a shape mismatch
+    ckpt_dir = args.ckpt_dir or f"/tmp/repro_train_ckpt_episodic_{args.learner}"
+    ckpt = CheckpointManager(ckpt_dir, keep=3)
+    result = train(state, step, batch_at, args.steps, ckpt=ckpt,
+                   ckpt_every=args.ckpt_every, state_template=state_abs,
+                   log_every=max(args.steps // 10, 1))
+    if not result.metrics_history:
+        print(f"nothing to do: checkpoint already at step {result.step} "
+              f"(resumed_from={result.resumed_from})")
+        return
+    print(f"done at step {result.step}; resumed_from={result.resumed_from}; "
+          f"loss {result.metrics_history[0]['loss']:.4f} -> "
+          f"{result.metrics_history[-1]['loss']:.4f}; "
+          f"accuracy {result.metrics_history[-1]['accuracy']:.3f}; "
+          f"throughput {result.throughput(meta.tasks_per_step):.1f} tasks/s")
 
 
 def main() -> None:
@@ -36,14 +108,29 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--schedule", choices=["cosine", "wsd"], default="cosine")
+    ap.add_argument("--schedule", choices=["cosine", "wsd"], default=None,
+                    help="LR schedule (LM path; default cosine). "
+                         "--episodic trains at constant --peak-lr")
     ap.add_argument("--peak-lr", type=float, default=3e-4)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="defaults to /tmp/repro_train_ckpt (LM) or "
+                         "/tmp/repro_train_ckpt_episodic (--episodic)")
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--pods", type=int, default=1)
     ap.add_argument("--full", action="store_true",
                     help="full assigned config (pod-scale deployment)")
+    ap.add_argument("--episodic", action="store_true",
+                    help="task-batched LITE meta-training workload")
+    ap.add_argument("--learner", default="protonets",
+                    choices=["protonets", "cnaps", "simple_cnaps"])
+    ap.add_argument("--tasks-per-step", type=int, default=8)
+    ap.add_argument("--dp-shards", type=int, default=1)
+    ap.add_argument("--image-size", type=int, default=24)
     args = ap.parse_args()
+
+    if args.episodic:
+        run_episodic(args)
+        return
 
     n_dev = len(jax.devices())
     if args.full and n_dev >= 256:
@@ -86,10 +173,15 @@ def main() -> None:
         def batch_at(s):
             return {k: jnp.asarray(v) for k, v in pipe.batch_at(s).items()}
 
-        ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+        ckpt = CheckpointManager(args.ckpt_dir or "/tmp/repro_train_ckpt",
+                                 keep=3)
         result = train(state, step, batch_at, args.steps,
                        ckpt=ckpt, ckpt_every=args.ckpt_every,
                        state_template=state_abs, log_every=25)
+    if not result.metrics_history:
+        print(f"nothing to do: checkpoint already at step {result.step} "
+              f"(resumed_from={result.resumed_from})")
+        return
     print(f"done at step {result.step}; "
           f"loss {result.metrics_history[0]['loss']:.4f} -> "
           f"{result.metrics_history[-1]['loss']:.4f}; "

@@ -1,1 +1,13 @@
-"""SPMD distribution layer: mesh builders, partition rules, constraints."""
+"""SPMD distribution layer: mesh builders, partition rules, constraints.
+
+Also re-exports ``shard_map`` across the jax relocation (it moved from
+``jax.experimental.shard_map`` to top-level ``jax.shard_map``); all repo
+code and test snippets import it from here.
+"""
+
+try:
+    from jax import shard_map  # jax >= 0.6
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["shard_map"]

@@ -53,6 +53,15 @@ class TrainResult:
     metrics_history: List[Dict]
     straggler_steps: List[int]
     resumed_from: Optional[int]
+    step_times: List[float] = dataclasses.field(default_factory=list)
+
+    def throughput(self, items_per_step: int = 1, skip: int = 1) -> float:
+        """items/sec over the run, excluding the first ``skip`` (compile)
+        steps — the task-batched launcher reports tasks/sec with this."""
+        times = self.step_times[skip:] or self.step_times
+        if not times:
+            return 0.0
+        return items_per_step * len(times) / sum(times)
 
 
 def train(state: PyTree,
@@ -78,6 +87,7 @@ def train(state: PyTree,
     step_fn = jax.jit(train_step)
     monitor = StragglerMonitor()
     history: List[Dict] = []
+    step_times: List[float] = []
 
     for step in range(start, num_steps):
         if preemption_hook is not None:
@@ -86,6 +96,7 @@ def train(state: PyTree,
         state, metrics = step_fn(state, batch_at(step))
         jax.block_until_ready(jax.tree.leaves(state)[0])
         dt = time.time() - t0
+        step_times.append(dt)
         monitor.observe(step, dt)
         if log_every and (step % log_every == 0):
             m = {k: float(v) for k, v in metrics.items()}
@@ -98,4 +109,4 @@ def train(state: PyTree,
         ckpt.save(num_steps, state)
     return TrainResult(state=state, step=num_steps, metrics_history=history,
                        straggler_steps=monitor.flagged,
-                       resumed_from=resumed_from)
+                       resumed_from=resumed_from, step_times=step_times)

@@ -68,5 +68,47 @@ def make_eval_step(cfg: ModelConfig) -> Callable:
     return eval_step
 
 
+# -- episodic (meta-training) adapters --------------------------------------
+# Bridge the task-batched LITE engine to the same (state, batch) pure-step
+# interface the fault-tolerant loop drives, so meta-training inherits
+# checkpoint/resume/straggler handling unchanged.  ``batch`` is
+# ``dict(tasks=TaskBatch, key=prng_key)`` — both produced deterministically
+# from the step index by the data side (repro.data.episodic.task_batch_at).
+
+
+def make_episodic_init_state(learner, adamw_cfg: AdamWConfig) -> Callable:
+    from repro.optim import adamw_init
+
+    def init_state(key) -> State:
+        params = learner.init(key)
+        return dict(params=params, opt=adamw_init(params, adamw_cfg))
+
+    return init_state
+
+
+def make_episodic_train_step(learner, lite, meta_cfg,
+                             adamw_cfg: AdamWConfig = None,
+                             mesh=None, dp_axis: str = "data") -> Callable:
+    """meta_cfg: repro.configs.base.MetaTrainConfig (tasks_per_step is the
+    data side's concern; dp_shards>1 requires ``mesh``)."""
+    from repro.core.episodic_train import make_batched_meta_train_step
+
+    adamw_cfg = adamw_cfg or AdamWConfig(weight_decay=0.0)
+    if meta_cfg.dp_shards > 1 and mesh is None:
+        raise ValueError(f"dp_shards={meta_cfg.dp_shards} requires a mesh "
+                         f"(e.g. repro.launch.mesh.make_dp_mesh)")
+    inner = make_batched_meta_train_step(
+        learner, lite, adamw=adamw_cfg, lr=meta_cfg.lr,
+        max_grad_norm=meta_cfg.max_grad_norm,
+        mesh=mesh if meta_cfg.dp_shards > 1 else None, dp_axis=dp_axis)
+
+    def train_step(state: State, batch: Dict) -> Tuple[State, Dict]:
+        params, opt, metrics = inner(state["params"], state["opt"],
+                                     batch["tasks"], batch["key"])
+        return dict(params=params, opt=opt), metrics
+
+    return train_step
+
+
 def adamw_for(cfg: ModelConfig) -> AdamWConfig:
     return AdamWConfig(state_dtype=cfg.opt_state_dtype)

@@ -46,9 +46,12 @@ def test_hlo_analyzer_loop_awareness():
     a = hlo.analyze(jax.jit(scan_model).lower(xs, ws).compile().as_text())
     b = hlo.analyze(jax.jit(unrolled).lower(xs, ws).compile().as_text())
     assert a["dot_flops"] == b["dot_flops"] > 0
-    # XLA's own count misses the loop factor (documented motivation)
-    xla = jax.jit(scan_model).lower(xs, ws).compile().cost_analysis()["flops"]
-    assert a["dot_flops"] > 4 * xla
+    # XLA's own count misses the loop factor (documented motivation).
+    # cost_analysis() returns a per-device list on some jax versions.
+    ca = jax.jit(scan_model).lower(xs, ws).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert a["dot_flops"] > 4 * ca["flops"]
 
 
 def test_param_specs_cover_big_leaves():
@@ -67,6 +70,7 @@ def test_param_specs_cover_big_leaves():
                 assert any(e is not None for e in tuple(spec)), (arch, leaf.shape)
 
 
+@pytest.mark.slow
 def test_elastic_reshard_roundtrip():
     """8 -> 4 -> 8 devices: state survives re-mesh bit-exactly."""
     _run_py("""
@@ -109,6 +113,7 @@ def test_dryrun_cell_subprocess(tmp_path):
     assert rec["flops_per_device"] > 0
 
 
+@pytest.mark.slow
 def test_compressed_psum_shard_map():
     """ef-compressed psum under shard_map on 8 fake devices."""
     _run_py("""
@@ -116,11 +121,12 @@ def test_compressed_psum_shard_map():
         from functools import partial
         from jax.sharding import PartitionSpec as P
         from repro.optim.compress import compressed_psum, zeros_error
+        from repro.sharding import shard_map
         mesh = jax.make_mesh((8,), ("data",))
         g = jnp.arange(8.0 * 16).reshape(8, 16) / 100.0
         err = jnp.zeros((8, 16))
 
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
                  out_specs=(P("data"), P("data")))
         def body(gs, es):
             s, ne = compressed_psum(dict(g=gs), "data", dict(g=es))

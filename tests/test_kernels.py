@@ -8,6 +8,25 @@ from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention as fa_raw
 
 
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (False, None, None), (True, 24, None),
+    (True, None, 50.0), (True, 24, 30.0),
+])
+def test_flash_attention_smoke(key, causal, window, cap):
+    """Fast tier-1 reference check: one small shape per masking/capping
+    variant (the full shape sweep is the `slow` test below)."""
+    s, d, dtype = 64, 32, jnp.float32
+    q = jax.random.normal(key, (2, s, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, s, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, s, d), dtype)
+    o = fa_raw(q, k, v, causal=causal, window=window, softcap=cap,
+               block_q=32, block_k=32, interpret=True)
+    r = ref.attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("s,d,dtype", [
     (128, 64, jnp.float32), (192, 64, jnp.float32), (256, 128, jnp.float32),
     (128, 64, jnp.bfloat16), (100, 32, jnp.float32),

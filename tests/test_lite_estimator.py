@@ -133,6 +133,76 @@ def test_stratified_covers_all_classes(key):
         assert classes == set(range(5))
 
 
+def test_lite_forward_exact_grid(key):
+    """Seeded-loop port of the hypothesis property (test_property.py::
+    test_lite_forward_always_exact): the forward value is the exact full
+    sum for every (n, h, chunk) combination — always runs, with or without
+    hypothesis installed."""
+    for seed, (n, h, chunk) in enumerate(itertools.product(
+            (2, 7, 24), (1, 3, 24), (None, 1, 5))):
+        k = jax.random.fold_in(key, seed)
+        p = jax.random.normal(k, (6, 4))
+        xs = jax.random.normal(jax.random.fold_in(k, 1), (n, 6))
+        got = lite_sum(_encode, p, xs, k, LiteSpec(h=h, chunk_size=chunk))
+        want = jnp.sum(_encode(p, xs), axis=0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-5, atol=5e-5, err_msg=str((n, h, chunk)))
+
+
+def test_lite_grad_unbiased_grid():
+    """Seeded-loop port of the unbiasedness property across several (n, h)
+    regimes: mean LITE gradient over draws approaches the exact gradient
+    to within sampling error."""
+    for n, h in ((6, 2), (12, 5), (20, 13)):
+        k0 = jax.random.key(1000 + n)
+        p = jax.random.normal(k0, (5, 3))
+        xs = jax.random.normal(jax.random.fold_in(k0, 1), (n, 5))
+
+        def loss(pp, k, hh, exact):
+            z = lite_sum(_encode, pp, xs, k, LiteSpec(h=hh, exact=exact))
+            return jnp.sum(jnp.sin(z) ** 2)
+
+        g_exact = np.asarray(jax.grad(
+            lambda pp: loss(pp, k0, 0, True))(p), np.float64)
+        gfn = jax.jit(jax.grad(loss), static_argnums=(2, 3))
+        draws = np.stack([np.asarray(gfn(p, jax.random.fold_in(k0, 2 + i),
+                                         h, False), np.float64)
+                          for i in range(200)])
+        sem = draws.std(0) / np.sqrt(len(draws))
+        err = np.abs(draws.mean(0) - g_exact)
+        assert np.all(err <= 5 * sem + 1e-6), (n, h, (err / (sem + 1e-12)).max())
+
+
+def test_lite_masked_matches_unmasked(key):
+    """mask=ones reproduces the unmasked estimator; padded rows with
+    mask=0 are invisible to forward AND backward."""
+    p = jax.random.normal(key, (6, 4))
+    xs = jax.random.normal(jax.random.fold_in(key, 1), (12, 6))
+    spec = LiteSpec(h=4)
+
+    def loss(pp, x, m):
+        return jnp.sum(lite_sum(_encode, pp, x, key, spec, mask=m) ** 2)
+
+    ones = jnp.ones((12,))
+    l_none = jnp.sum(lite_sum(_encode, p, xs, key, spec) ** 2)
+    np.testing.assert_allclose(float(loss(p, xs, ones)), float(l_none),
+                               rtol=1e-6)
+    g_ones = jax.grad(loss)(p, xs, ones)
+    g_none = jax.grad(lambda pp: jnp.sum(
+        lite_sum(_encode, pp, xs, key, spec) ** 2))(p)
+    np.testing.assert_allclose(np.asarray(g_ones), np.asarray(g_none),
+                               rtol=1e-5, atol=1e-6)
+
+    # pad with garbage rows, masked out -> same value and gradient
+    xs_pad = jnp.concatenate([xs, 100.0 + jnp.zeros((5, 6))])
+    m_pad = jnp.concatenate([ones, jnp.zeros((5,))])
+    np.testing.assert_allclose(float(loss(p, xs_pad, m_pad)), float(l_none),
+                               rtol=1e-5)
+    g_pad = jax.grad(loss)(p, xs_pad, m_pad)
+    np.testing.assert_allclose(np.asarray(g_pad), np.asarray(g_none),
+                               rtol=1e-4, atol=1e-5)
+
+
 def test_subsampled_task_value_unbiased(setup):
     p, xs = setup
     exact = jnp.sum(_encode(p, xs), axis=0)

@@ -1,7 +1,18 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skips cleanly when hypothesis isn't installed; the two highest-value
+properties here (LITE forward exactness, estimator unbiasedness) also have
+plain seeded-loop ports in tests/test_lite_estimator.py that always run.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; seeded-loop ports cover the key "
+           "properties (see test_lite_estimator.py)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lite import LiteSpec, lite_sum

@@ -1,0 +1,293 @@
+"""Task-batched engine correctness: collation, batched==looped equivalence,
+padding invariance, per-task key independence, and the shard_map
+data-parallel path (subprocess — fake devices must not leak here)."""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.episodic import TaskBatch, validate_task_batch
+from repro.core.episodic_train import (make_batched_meta_grads,
+                                       make_batched_meta_train_step,
+                                       make_meta_train_step, task_key)
+from repro.core.lite import LiteSpec, sample_h_indices
+from repro.core.meta_learners import MetaLearnerConfig, make_learner
+from repro.core.set_encoder import SetEncoderConfig
+from repro.data.episodic import (EpisodicImageConfig, collate_task_batch,
+                                 sample_image_task, sample_image_task_batch,
+                                 task_batch_at)
+from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
+from repro.optim import AdamWConfig, adamw_init
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+BB = make_conv_backbone(ConvBackboneConfig(widths=(8,), feature_dim=16))
+SET_CFG = SetEncoderConfig(kind="conv", conv_blocks=1, conv_width=8, task_dim=16)
+TCFG = EpisodicImageConfig(way=5, shot=5, query_per_class=3, image_size=12)
+SPEC = LiteSpec(h=5)
+
+
+def _learner(kind="protonets"):
+    return make_learner(MetaLearnerConfig(kind=kind, way=5), BB, SET_CFG)
+
+
+def _tasks(n, shot=5):
+    cfg = EpisodicImageConfig(way=5, shot=shot, query_per_class=3,
+                              image_size=12)
+    return [sample_image_task(jax.random.key(100 + i), cfg) for i in range(n)]
+
+
+def _max_leaf_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# -- collator ---------------------------------------------------------------
+
+
+def test_collate_shapes_masks_and_labels():
+    tasks = _tasks(3)
+    batch = collate_task_batch(tasks, support_size=32, query_size=16)
+    validate_task_batch(batch)
+    assert batch.num_tasks == 3 and batch.way == 5
+    assert batch.support_x.shape[:2] == (3, 32)
+    assert batch.query_x.shape[:2] == (3, 16)
+    # real prefix is intact, padding is masked and labelled -1
+    np.testing.assert_array_equal(np.asarray(batch.support_y[0][:25]),
+                                  np.asarray(tasks[0].support_y))
+    assert np.all(np.asarray(batch.support_y[0][25:]) == -1)
+    np.testing.assert_array_equal(np.asarray(batch.support_mask[0]),
+                                  (np.arange(32) < 25).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(batch.query_mask[0]),
+                                  (np.arange(16) < 15).astype(np.float32))
+
+
+def test_collate_ragged_tasks_pad_to_batch_max():
+    a, b = _tasks(1, shot=4)[0], _tasks(1, shot=6)[0]
+    batch = collate_task_batch([a, b])
+    assert batch.support_x.shape[1] == 30      # max(20, 30)
+    assert float(batch.support_mask[0].sum()) == 20.0
+    assert float(batch.support_mask[1].sum()) == 30.0
+
+
+def test_collate_bucket_rounding():
+    batch = collate_task_batch(_tasks(2), bucket_multiple=16)
+    assert batch.support_x.shape[1] == 32      # 25 -> next multiple of 16
+    assert batch.query_x.shape[1] == 16        # 15 -> 16
+
+
+def test_task_batch_at_deterministic():
+    b1 = task_batch_at(jax.random.key(3), TCFG, 4, step=7)
+    b2 = task_batch_at(jax.random.key(3), TCFG, 4, step=7)
+    b3 = task_batch_at(jax.random.key(3), TCFG, 4, step=8)
+    assert _max_leaf_diff(b1, b2) == 0.0
+    assert _max_leaf_diff(b1, b3) > 0.0
+
+
+# -- batched == looped ------------------------------------------------------
+
+
+def test_batched_grads_equal_mean_of_looped(key):
+    """Engine contract: vmapped task-batch gradients == the mean of per-task
+    gradients computed one task at a time with the same per-task keys."""
+    lr = _learner()
+    params = lr.init(key)
+    tasks = _tasks(4)
+    batch = collate_task_batch(tasks)
+    k = jax.random.key(9)
+    loss_b, acc_b, g_b = jax.jit(make_batched_meta_grads(lr, SPEC))(
+        params, batch, k)
+
+    gs, losses = [], []
+    for i, t in enumerate(tasks):
+        (l, _), g = jax.value_and_grad(
+            lambda p: lr.meta_loss(p, t, task_key(k, i), SPEC),
+            has_aux=True)(params)
+        gs.append(g)
+        losses.append(float(l))
+    g_mean = jax.tree.map(lambda *a: jnp.mean(jnp.stack(a), 0), *gs)
+
+    np.testing.assert_allclose(float(loss_b), np.mean(losses), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(g_b), jax.tree.leaves(g_mean)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_batched_step_equals_looped_step_at_one_task(key):
+    """tasks_per_step=1 reproduces paper Algorithm 1's per-task step."""
+    lr = _learner()
+    params = lr.init(key)
+    task = _tasks(1)[0]
+    adamw = AdamWConfig(weight_decay=0.0)
+    opt = adamw_init(params, adamw)
+    k = jax.random.key(4)
+
+    s_loop = jax.jit(make_meta_train_step(lr, SPEC, adamw=adamw))
+    p1, o1, m1 = s_loop(params, opt, task, task_key(k, 0))
+
+    s_batch = jax.jit(make_batched_meta_train_step(lr, SPEC, adamw=adamw))
+    p2, o2, m2 = s_batch(params, opt, collate_task_batch([task]), k)
+
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# -- padding invariance -----------------------------------------------------
+
+
+def test_padding_invariance_protonets(key):
+    """A padded batch must yield the same loss/grads as the unpadded one —
+    the masked estimators re-draw the identical H subset and zero-weight
+    every padded row."""
+    lr = _learner()
+    params = lr.init(key)
+    tasks = _tasks(3)
+    k = jax.random.key(11)
+    gfn = jax.jit(make_batched_meta_grads(lr, SPEC))
+    l0, _, g0 = gfn(params, collate_task_batch(tasks), k)
+    lp, _, gp = gfn(params, collate_task_batch(tasks, support_size=48,
+                                               query_size=24), k)
+    np.testing.assert_allclose(float(l0), float(lp), rtol=1e-6)
+    gnorm = float(jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(g0))))
+    assert _max_leaf_diff(g0, gp) < 1e-4 * max(gnorm, 1.0)
+
+
+def test_padding_invariance_simple_cnaps_loss(key):
+    """Simple CNAPs runs a cholesky/solve chain that amplifies f32
+    reduction-order noise, so the invariance contract is checked at the
+    loss level with a float tolerance."""
+    lr = _learner("simple_cnaps")
+    params = lr.init(key)
+    tasks = _tasks(2, shot=6)
+    k = jax.random.key(13)
+    gfn = jax.jit(make_batched_meta_grads(lr, SPEC))
+    l0 = gfn(params, collate_task_batch(tasks), k)[0]
+    lp = gfn(params, collate_task_batch(tasks, support_size=48,
+                                        query_size=24), k)[0]
+    np.testing.assert_allclose(float(l0), float(lp), rtol=5e-3)
+
+
+def test_padded_query_rows_never_move_loss(key):
+    """Doubling the query pad alone must not change anything (regression
+    guard for the masked cross-entropy denominator)."""
+    lr = _learner()
+    params = lr.init(key)
+    tasks = _tasks(2)
+    k = jax.random.key(15)
+    gfn = jax.jit(make_batched_meta_grads(lr, SPEC))
+    l1 = gfn(params, collate_task_batch(tasks, query_size=16), k)[0]
+    l2 = gfn(params, collate_task_batch(tasks, query_size=32), k)[0]
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+# -- per-task key independence ----------------------------------------------
+
+
+def test_per_task_keys_draw_different_h_subsets():
+    """Engine key convention: task i uses task_key(key, i); distinct tasks
+    must draw distinct H subsets (Algorithm 1 line 4, independently per
+    task in the batch)."""
+    key = jax.random.key(0)
+    draws = [np.sort(np.asarray(
+        sample_h_indices(task_key(key, i), 20, 5)[0])) for i in range(6)]
+    distinct = {tuple(d.tolist()) for d in draws}
+    assert len(distinct) > 1, draws
+
+
+def test_identical_tasks_get_independent_gradients(key):
+    """Two copies of the SAME task in one batch: exact forward => equal
+    losses, but independent H draws => different per-task gradients.  The
+    looped reference with the engine's key convention shows both."""
+    lr = _learner()
+    params = lr.init(key)
+    task = _tasks(1, shot=8)[0]
+    k = jax.random.key(21)
+    grads = []
+    for i in range(2):
+        g = jax.grad(lambda p: lr.meta_loss(p, task, task_key(k, i), SPEC)[0])(
+            params)
+        grads.append(g)
+    assert _max_leaf_diff(grads[0], grads[1]) > 1e-8
+
+    # and the batched engine's mean over the two slots matches their mean
+    batch = collate_task_batch([task, task])
+    _, _, g_b = jax.jit(make_batched_meta_grads(lr, SPEC))(params, batch, k)
+    g_mean = jax.tree.map(lambda a, b: (a + b) / 2.0, grads[0], grads[1])
+    for a, b in zip(jax.tree.leaves(g_b), jax.tree.leaves(g_mean)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+# -- data-parallel shard_map path -------------------------------------------
+
+
+def test_shard_map_dp_matches_single_device(tmp_path):
+    """4 fake CPU devices: the dp-sharded step must reproduce the
+    single-device batched step (params replicated, grads pmean'd)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from repro.core.episodic_train import make_batched_meta_train_step
+        from repro.core.lite import LiteSpec
+        from repro.core.meta_learners import MetaLearnerConfig, make_learner
+        from repro.core.set_encoder import SetEncoderConfig
+        from repro.data.episodic import (EpisodicImageConfig,
+                                         sample_image_task_batch)
+        from repro.launch.mesh import make_dp_mesh
+        from repro.models.conv_backbone import (ConvBackboneConfig,
+                                                make_conv_backbone)
+        from repro.optim import AdamWConfig, adamw_init
+
+        assert len(jax.devices()) == 4
+        bb = make_conv_backbone(ConvBackboneConfig(widths=(8,), feature_dim=16))
+        lr = make_learner(
+            MetaLearnerConfig(kind="protonets", way=5), bb,
+            SetEncoderConfig(kind="conv", conv_blocks=1, conv_width=4,
+                             task_dim=8))
+        params = lr.init(jax.random.key(0))
+        spec = LiteSpec(h=4)
+        adamw = AdamWConfig(weight_decay=0.0)
+        opt = adamw_init(params, adamw)
+        tcfg = EpisodicImageConfig(way=5, shot=4, query_per_class=2,
+                                   image_size=8)
+        batch = sample_image_task_batch(jax.random.key(3), tcfg, 8)
+        key = jax.random.key(9)
+
+        s1 = jax.jit(make_batched_meta_train_step(lr, spec, adamw=adamw))
+        p1, _, m1 = s1(params, opt, batch, key)
+        s2 = jax.jit(make_batched_meta_train_step(
+            lr, spec, adamw=adamw, mesh=make_dp_mesh(4)))
+        p2, _, m2 = s2(params, opt, batch, key)
+
+        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                  zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        assert err < 1e-6, err
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-5
+        print("DP_OK", err)
+        """)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=540)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DP_OK" in out.stdout
+
+
+def test_dp_step_rejects_indivisible_batch(key):
+    class FakeMesh:
+        shape = dict(data=3)
+
+    lr = _learner()
+    params = lr.init(key)
+    step = make_batched_meta_train_step(lr, SPEC, mesh=FakeMesh())
+    batch = collate_task_batch(_tasks(4))
+    with pytest.raises(ValueError, match="divisible"):
+        step(params, adamw_init(params, AdamWConfig()), batch,
+             jax.random.key(0))
