@@ -1,11 +1,28 @@
 """Paper §D.4 memory claim: LITE's live-activation footprint scales with
 |H| + chunk, not with N (the paper reports ~8 GB at H=40 vs ~16 GB full
 at 84x84).  We measure compiled peak temp bytes of the meta-training step
-via XLA's memory analysis as |H| varies at fixed N.
+via XLA's memory analysis as |H| varies at fixed N — and, for each
+subsampled point, the ``LiteSpec.compute_dtype='bfloat16'`` variant.
+
+Two memory columns per row:
+  * ``peak_temp_bytes`` — XLA memory analysis of THIS container's CPU
+    lowering.  CAVEAT: XLA CPU up-converts bf16 convolutions/dots to fp32
+    and materializes the converts, so the bf16 rows can come out LARGER
+    here; on accelerators with native bf16 compute (TPU/GPU) the same HLO
+    keeps the complement activations half-width.  (Same status as the
+    flash-attention sweeps: CPU-verified logic, TPU-validated memory
+    pending — see ROADMAP.)
+  * ``chunk_live_bytes_model`` — backend-independent accounting of one
+    no-grad complement chunk: the sum of every intermediate the chunk's
+    encode produces, at the dtype the estimator actually requests.  This
+    is the quantity LiteSpec.compute_dtype halves by construction, and
+    the one that bounds live activations wherever the backend honors the
+    dtype.
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.lite import LiteSpec
@@ -16,7 +33,11 @@ from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
 
 H_VALUES = (4, 16, 64, 100)     # 100 == N -> exact
 N = 100
-CHUNK = 8
+# Throughput-oriented chunk: big enough that the no-grad complement is the
+# binding memory term (the paper's large-N regime — its Algorithm 1 also
+# microbatches the QUERY pass, so the query side is kept small here).
+# This is the regime the mixed-precision complement targets.
+CHUNK = 32
 
 
 def run() -> list:
@@ -24,26 +45,46 @@ def run() -> list:
                                                feature_dim=64))
     set_cfg = SetEncoderConfig(kind="conv", conv_blocks=3, conv_width=16,
                                task_dim=32)
-    tcfg = EpisodicImageConfig(way=10, shot=10, query_per_class=4,
+    tcfg = EpisodicImageConfig(way=10, shot=10, query_per_class=1,
                                image_size=32)
     task = sample_image_task(jax.random.key(0), tcfg)
     lr = make_learner(MetaLearnerConfig(kind="simple_cnaps", way=10), bb, set_cfg)
     params = lr.init(jax.random.key(1))
 
+    def chunk_live_bytes(dt) -> int:
+        """Backend-independent bytes of every intermediate in one no-grad
+        complement chunk's encode (backbone features at the estimator's
+        requested dtype), from the jaxpr avals."""
+        cd = jnp.dtype(dt) if dt else jnp.float32
+        p = jax.tree.map(lambda a: a.astype(cd) if jnp.issubdtype(
+            a.dtype, jnp.floating) else a, params["bb"])
+        x = jnp.zeros((CHUNK, tcfg.image_size, tcfg.image_size,
+                       tcfg.channels), cd)
+        jaxpr = jax.make_jaxpr(lambda pp, xx: bb.features(pp, xx, None))(p, x)
+        return int(sum(v.aval.size * v.aval.dtype.itemsize
+                       for eqn in jaxpr.eqns for v in eqn.outvars))
+
     rows = []
     for h in H_VALUES:
-        spec = LiteSpec(h=h, chunk_size=CHUNK if h < N else None)
+        dtypes = (None,) if h >= N else (None, "bfloat16")
+        for dt in dtypes:
+            spec = LiteSpec(h=h, chunk_size=CHUNK if h < N else None,
+                            compute_dtype=dt)
 
-        def loss(p, t, k):
-            return lr.meta_loss(p, t, k, spec)[0]
+            def loss(p, t, k):
+                return lr.meta_loss(p, t, k, spec)[0]
 
-        lowered = jax.jit(jax.grad(loss)).lower(params, task, jax.random.key(2))
-        mem = lowered.compile().memory_analysis()
-        rows.append(dict(
-            h=h, mode=("exact" if h >= N else f"lite_chunk{CHUNK}"),
-            peak_temp_bytes=int(mem.temp_size_in_bytes),
-            argument_bytes=int(mem.argument_size_in_bytes),
-        ))
+            lowered = jax.jit(jax.grad(loss)).lower(params, task,
+                                                    jax.random.key(2))
+            mem = lowered.compile().memory_analysis()
+            rows.append(dict(
+                h=h, mode=("exact" if h >= N else f"lite_chunk{CHUNK}"),
+                complement_dtype=(dt or "float32"),
+                peak_temp_bytes=int(mem.temp_size_in_bytes),
+                chunk_live_bytes_model=(0 if h >= N
+                                        else chunk_live_bytes(dt)),
+                argument_bytes=int(mem.argument_size_in_bytes),
+            ))
     return rows
 
 

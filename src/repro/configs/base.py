@@ -141,14 +141,29 @@ class MetaTrainConfig:
       step (the batch-of-episodes axis; 1 reproduces paper Algorithm 1).
     dp_shards: data-parallel shards over the task axis (shard_map); must
       divide tasks_per_step.  1 = single-device vmap only.
+    lite_dtype: LiteSpec.compute_dtype for the no-grad complement pass
+      (None = fp32; 'bfloat16' runs the dominant no-grad FLOPs in half
+      precision with fp32 accumulation; gradients are unchanged).
+    schedule: LR schedule name (None = constant ``lr``; 'cosine' | 'wsd',
+      resolved by repro.optim.schedules.schedule_for with ``lr`` as peak
+      over warmup_steps/total_steps).
+    prefetch: background host->device batch lookahead depth for the train
+      loop (0 = synchronous); donate: donate params/opt-state buffers to
+      the jitted step so they update in place.
     """
 
     tasks_per_step: int = 8
     dp_shards: int = 1
     lite_h: int = 8
     lite_chunk: Optional[int] = None
+    lite_dtype: Optional[str] = None
     lr: float = 1e-3
     max_grad_norm: float = 10.0
+    schedule: Optional[str] = None
+    warmup_steps: int = 0
+    total_steps: int = 0
+    prefetch: int = 2
+    donate: bool = True
 
 
 # -- step shapes (assigned input-shape set for LM-family archs) -------------

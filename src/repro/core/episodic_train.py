@@ -144,6 +144,7 @@ def make_batched_meta_train_step(learner: MetaLearner, lite: LiteSpec,
                                  adamw: AdamWConfig = AdamWConfig(weight_decay=0.0),
                                  lr: float = 1e-3,
                                  max_grad_norm: float = 10.0,
+                                 schedule: Optional[Callable] = None,
                                  mesh=None, dp_axis: str = "data") -> Callable:
     """Task-batched meta-training step: T tasks -> ONE AdamW step.
 
@@ -157,14 +158,22 @@ def make_batched_meta_train_step(learner: MetaLearner, lite: LiteSpec,
     axis, and every shard applies the identical optimizer update — so the
     result is bit-comparable to the single-device batched step.
     ``batch.num_tasks`` must be divisible by S.
+
+    ``schedule`` (step -> lr, e.g. from ``repro.optim.schedules``)
+    overrides the constant ``lr``; the step index is the optimizer-state
+    update count, so schedules survive checkpoint resume for free.
+    Metrics report the lr actually applied.
     """
     grads_fn = make_batched_meta_grads(learner, lite)
 
     def apply_update(params, opt_state, loss, acc, grads):
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
-        params, opt_state = adamw_update(params, grads, opt_state, lr, adamw)
+        lr_t = lr if schedule is None else schedule(opt_state["count"])
+        params, opt_state = adamw_update(params, grads, opt_state, lr_t,
+                                         adamw)
         return params, opt_state, dict(loss=loss, accuracy=acc,
-                                       grad_norm=gnorm)
+                                       grad_norm=gnorm,
+                                       lr=jnp.asarray(lr_t, jnp.float32))
 
     if mesh is not None and dp_axis not in dict(mesh.shape):
         raise ValueError(f"mesh axes {tuple(dict(mesh.shape))} lack "
@@ -208,15 +217,29 @@ def make_batched_meta_train_step(learner: MetaLearner, lite: LiteSpec,
     return step
 
 
+def jit_task_step(step: Callable, donate: bool = True):
+    """jit a ``(params, opt_state, batch, key)`` task step, donating the
+    params and optimizer-state buffers (arguments 0 and 1) so AdamW
+    updates in place instead of allocating fresh copies each step.  The
+    caller must thread the returned state — the donated inputs are dead
+    after the call (on backends implementing donation, reuse raises)."""
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
 def run_looped_baseline(learner: MetaLearner, lite: LiteSpec,
                         params: PyTree, opt_state: Dict, tasks, key,
                         adamw: AdamWConfig = AdamWConfig(weight_decay=0.0),
-                        lr: float = 1e-3, max_grad_norm: float = 10.0):
+                        lr: float = 1e-3, max_grad_norm: float = 10.0,
+                        donate: bool = False):
     """Paper Algorithm 1 verbatim: one optimizer step PER task, in a Python
     loop.  The throughput baseline ``benchmarks/task_throughput.py`` compares
-    the batched engine against; uses the same per-task key convention."""
-    step = jax.jit(make_meta_train_step(learner, lite, adamw=adamw, lr=lr,
-                                        max_grad_norm=max_grad_norm))
+    the batched engine against; uses the same per-task key convention.
+    ``donate=True`` updates params/opt state in place — the caller's input
+    buffers are consumed by the first step."""
+    step = jit_task_step(make_meta_train_step(learner, lite, adamw=adamw,
+                                              lr=lr,
+                                              max_grad_norm=max_grad_norm),
+                         donate=donate)
     metrics = None
     for i, task in enumerate(tasks):
         params, opt_state, metrics = step(params, opt_state, task,

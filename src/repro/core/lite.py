@@ -44,7 +44,7 @@ from typing import Any, Callable, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.common.tree import tree_stop_gradient
+from repro.common.tree import tree_cast, tree_stop_gradient
 
 PyTree = Any
 EncodeFn = Callable[[PyTree, PyTree], PyTree]  # (params, batched_inputs) -> per-example encodings
@@ -60,11 +60,21 @@ class LiteSpec:
       chunk_size: batch size for the no-grad complement forward. Bounds
          activation memory of the H-bar pass. ``None`` -> one chunk.
       exact: force exact gradients (baseline / eval mode).
+      compute_dtype: optional dtype name (e.g. ``"bfloat16"``) for the
+         no-grad COMPLEMENT forward only: frozen params and inputs are cast
+         down, per-chunk encodings are summed with float32 accumulation.
+         The differentiable H pass is untouched, so gradients are
+         bit-identical to the full-precision estimator; only the exact
+         forward value carries low-precision rounding.  At large N the
+         complement dominates the FLOPs and the live chunk activations, so
+         this is the fast/low-memory path.  Ignored in exact mode (there
+         is no complement pass).
     """
 
     h: int = 8
     chunk_size: int | None = None
     exact: bool = False
+    compute_dtype: str | None = None
 
     def resolved_h(self, n: int) -> int:
         return n if self.exact else min(self.h, n)
@@ -144,18 +154,25 @@ def straight_through(full_value: PyTree, grad_value: PyTree, scale) -> PyTree:
 
 
 def _chunked_nograd_sum(encode_fn: EncodeFn, frozen_params: PyTree, xs: PyTree,
-                        chunk_size: int | None) -> PyTree:
+                        chunk_size: int | None,
+                        accum_dtype: jnp.dtype | None = None) -> PyTree:
     """Sum of per-example encodings over xs, computed under stop-gradient'ed
     parameters, in sequential chunks via ``lax.map`` (so only one chunk's
-    activations are ever live)."""
+    activations are ever live).  ``accum_dtype`` upcasts each chunk's sum
+    (and the cross-chunk sum) — the fp32 accumulator the mixed-precision
+    complement pass relies on."""
     leaves = jax.tree.leaves(xs)
     n = leaves[0].shape[0]
     if n == 0:
         raise ValueError("empty complement — use exact mode instead")
     xs = tree_stop_gradient(xs)
+
+    def _sum0(e):
+        return jnp.sum(e, axis=0, dtype=accum_dtype)
+
     if chunk_size is None or chunk_size >= n:
         enc = encode_fn(frozen_params, xs)
-        return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
+        return jax.tree.map(_sum0, enc)
 
     # Pad to a multiple of chunk_size; padded tail is masked out of the sum.
     num_chunks = -(-n // chunk_size)
@@ -178,7 +195,7 @@ def _chunked_nograd_sum(encode_fn: EncodeFn, frozen_params: PyTree, xs: PyTree,
         chunk, m = args
         enc = encode_fn(frozen_params, chunk)
         return jax.tree.map(
-            lambda e: jnp.sum(e * m.reshape((-1,) + (1,) * (e.ndim - 1)).astype(e.dtype), axis=0),
+            lambda e: _sum0(e * m.reshape((-1,) + (1,) * (e.ndim - 1)).astype(e.dtype)),
             enc,
         )
 
@@ -199,6 +216,22 @@ def _masked_encode(encode_fn: EncodeFn) -> EncodeFn:
     return enc
 
 
+def _ones_mask_like(xs: PyTree) -> jnp.ndarray:
+    """All-real validity mask for an unmasked input set.  ``mask=None`` and
+    an explicit ones mask are the SAME estimator bit-for-bit (weighting by
+    1.0 is exact and padded slots simply don't exist), which is what lets
+    ``lite_sum``/``subsampled_task_sum`` share one body."""
+    return jnp.ones((jax.tree.leaves(xs)[0].shape[0],), jnp.float32)
+
+
+def _masked_scale(mask: jnp.ndarray, h: int) -> jnp.ndarray:
+    """N/H rescale over REAL examples only: when fewer than H real examples
+    exist every real example lands in H and the gradient is exact
+    (scale 1)."""
+    n_real = jnp.sum(mask)
+    return n_real / jnp.minimum(float(h), jnp.maximum(n_real, 1.0))
+
+
 def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
              spec: LiteSpec, mask: jnp.ndarray | None = None) -> PyTree:
     """LITE estimator of ``sum_n encode_fn(params, x_n)`` (paper Eq. 8).
@@ -212,13 +245,14 @@ def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
       params: differentiable parameters.
       xs: pytree of support inputs, leading axis N on every leaf.
       key: PRNG key for the H subset draw.
-      spec: LiteSpec.
+      spec: LiteSpec.  With ``spec.compute_dtype`` the complement forward
+        runs under down-cast frozen params/inputs with fp32 accumulation —
+        gradients are untouched (they flow only through the H pass).
       mask: optional (N,) validity weights (1 real / 0 collator padding).
         Padded rows contribute nothing to forward or backward; the N/H
         rescale uses the REAL count, so a padded task batch reproduces the
-        unpadded task's estimator exactly.  When fewer than H real examples
-        exist, every real example lands in H and the gradient is exact
-        (scale 1).
+        unpadded task's estimator exactly.  ``None`` is exactly equivalent
+        to an all-ones mask.
 
     Returns:
       Pytree of summed encodings (leading axis reduced).
@@ -226,28 +260,7 @@ def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
     n = jax.tree.leaves(xs)[0].shape[0]
     h = spec.resolved_h(n)
     if mask is None:
-        if spec.exact or h >= n:
-            enc = encode_fn(params, xs)
-            return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
-
-        h_idx, comp_idx = sample_h_indices(key, n, h)
-        take = lambda a, i: jnp.take(a, i, axis=0)
-        xs_h = jax.tree.map(partial(take, i=h_idx), xs)
-        xs_c = jax.tree.map(partial(take, i=comp_idx), xs)
-
-        # Differentiable pass over H (single batch — |H| is small by
-        # construction).
-        enc_h = encode_fn(params, xs_h)
-        sum_h = jax.tree.map(lambda e: jnp.sum(e, axis=0), enc_h)
-
-        # No-grad pass over the complement, chunked.
-        frozen = tree_stop_gradient(params)
-        sum_c = _chunked_nograd_sum(encode_fn, frozen, xs_c, spec.chunk_size)
-
-        full = jax.tree.map(lambda a, b: jax.lax.stop_gradient(a + b),
-                            sum_h, sum_c)
-        return straight_through(full, sum_h, n / h)
-
+        mask = _ones_mask_like(xs)
     enc_w = _masked_encode(encode_fn)
     if spec.exact or h >= n:
         enc = enc_w(params, (xs, mask))
@@ -258,17 +271,26 @@ def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
     xm_h = (jax.tree.map(partial(take, i=h_idx), xs), mask[h_idx])
     xm_c = (jax.tree.map(partial(take, i=comp_idx), xs), mask[comp_idx])
 
+    # Differentiable pass over H (single batch — |H| is small by
+    # construction).
     enc_h = enc_w(params, xm_h)
     sum_h = jax.tree.map(lambda e: jnp.sum(e, axis=0), enc_h)
 
+    # No-grad pass over the complement, chunked; optionally in low
+    # precision (the dominant FLOPs at large N) with fp32 accumulation.
     frozen = tree_stop_gradient(params)
-    sum_c = _chunked_nograd_sum(enc_w, frozen, xm_c, spec.chunk_size)
+    accum = None
+    if spec.compute_dtype is not None:
+        cd = jnp.dtype(spec.compute_dtype)
+        frozen = tree_cast(frozen, cd)
+        xm_c = (tree_cast(xm_c[0], cd), xm_c[1])
+        accum = jnp.float32
+    sum_c = _chunked_nograd_sum(enc_w, frozen, xm_c, spec.chunk_size,
+                                accum_dtype=accum)
 
-    full = jax.tree.map(lambda a, b: jax.lax.stop_gradient(a + b),
+    full = jax.tree.map(lambda a, b: jax.lax.stop_gradient(a + b.astype(a.dtype)),
                         sum_h, sum_c)
-    n_real = jnp.sum(mask)
-    scale = n_real / jnp.minimum(float(h), jnp.maximum(n_real, 1.0))
-    return straight_through(full, sum_h, scale)
+    return straight_through(full, sum_h, _masked_scale(mask, h))
 
 
 def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
@@ -296,8 +318,13 @@ def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
     def seg_encode(p, batch):
         inputs, onehot = batch
         enc = encode_fn(p, inputs)  # leaves (B, ...)
+        # onehot entries are 0/1, so the product is exact in ANY float
+        # dtype; keeping e's dtype lets a low-precision complement pass
+        # stay low-precision (fp32 class sums come from the estimator's
+        # fp32 accumulation).
         return jax.tree.map(
-            lambda e: jnp.einsum("b...,bc->bc...", e.astype(jnp.float32), onehot), enc
+            lambda e: jnp.einsum("b...,bc->bc...", e,
+                                 onehot.astype(e.dtype)), enc
         )
 
     sums = lite_sum(seg_encode, params, (xs, onehot_all), key, spec, mask=mask)
@@ -327,14 +354,7 @@ def subsampled_task_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
     n = jax.tree.leaves(xs)[0].shape[0]
     h = spec.resolved_h(n)
     if mask is None:
-        if spec.exact or h >= n:
-            enc = encode_fn(params, xs)
-            return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
-        h_idx, _ = sample_h_indices(key, n, h)
-        xs_h = jax.tree.map(lambda a: jnp.take(a, h_idx, axis=0), xs)
-        enc = encode_fn(params, xs_h)
-        return jax.tree.map(lambda e: (n / h) * jnp.sum(e, axis=0), enc)
-
+        mask = _ones_mask_like(xs)
     enc_w = _masked_encode(encode_fn)
     if spec.exact or h >= n:
         enc = enc_w(params, (xs, mask))
@@ -342,6 +362,5 @@ def subsampled_task_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
     h_idx, _ = sample_h_indices(key, n, h, mask)
     enc = enc_w(params, (jax.tree.map(lambda a: jnp.take(a, h_idx, axis=0), xs),
                          mask[h_idx]))
-    n_real = jnp.sum(mask)
-    scale = n_real / jnp.minimum(float(h), jnp.maximum(n_real, 1.0))
+    scale = _masked_scale(mask, h)
     return jax.tree.map(lambda e: scale * jnp.sum(e, axis=0), enc)

@@ -176,7 +176,11 @@ def _make_cnaps_family(cfg: MetaLearnerConfig, bb: BackboneDef,
                      estimator=lite_segment_sum, mask=None):
         def encode(pf, x):
             bbp, f = pf
-            feat = bb.features(bbp, x, f).astype(jnp.float32)
+            # dtype-preserving: fp32 params give fp32 feats (as before);
+            # under a LiteSpec.compute_dtype complement the bf16 feats and
+            # outer products stay bf16 (the memory win) — the estimator
+            # accumulates the class sums in fp32.
+            feat = bb.features(bbp, x, f)
             if simple:
                 outer = jnp.einsum("bi,bj->bij", feat, feat)
                 return dict(feat=feat, outer=outer)

@@ -4,7 +4,15 @@ real datasets are unavailable offline; DESIGN.md §8 records this).
 Image tasks: each class is a Gaussian blob in pixel space with a class-
 specific low-frequency pattern — linearly separable enough that accuracy
 trends (flat-in-|H|, LITE > subsampled-task) are measurable in minutes on
-CPU, yet non-trivial for a conv net from scratch.
+CPU, yet non-trivial for a conv net from scratch.  Two sources: the jitted
+on-device sampler (``task_batch_at``) and a host-side numpy twin
+(``host_task_batch_at``) whose collation/augmentation a
+``repro.train.pipeline.Prefetcher`` can overlap with device compute.
+
+Shape bucketing: ``plan_buckets`` turns a stream histogram of task sizes
+into <= ``max_buckets`` pad targets and ``collate_with_buckets`` collates
+against them, so ragged streams hit a small closed set of compiled shapes
+(paired with ``repro.train.pipeline.BucketedStepCache``).
 
 Token tasks: each class is a distinct unigram distribution over the vocab;
 sequences sample iid from it.  Used by the episodic-LM integration.
@@ -71,6 +79,67 @@ def bucket_size(n: int, multiple: int = 8) -> int:
     keeps the number of distinct compiled shapes small when task sizes vary
     stream-to-stream (each (support, query) bucket pair is one XLA program)."""
     return max(((n + multiple - 1) // multiple) * multiple, multiple)
+
+
+def plan_buckets(sizes: Sequence[int], max_buckets: int = 4,
+                 multiple: int = 8) -> Tuple[int, ...]:
+    """Choose at most ``max_buckets`` pad targets from a stream histogram.
+
+    Every observed size rounds up (``bucket_size``) into a candidate cap;
+    candidates are then greedily merged — always absorbing the cap whose
+    removal adds the least total padding, weighted by how many stream
+    elements land in it — until at most ``max_buckets`` remain.  The
+    returned caps are ascending, cover ``max(sizes)``, and each is a
+    multiple of ``multiple``, so a ragged stream collated against them
+    produces a bounded set of compiled shapes with near-minimal padding
+    waste for the observed distribution.
+    """
+    if not sizes:
+        raise ValueError("plan_buckets needs a non-empty size histogram")
+    if max_buckets < 1:
+        raise ValueError(f"max_buckets={max_buckets} must be >= 1")
+    hist: dict = {}
+    for s in sizes:
+        cap = bucket_size(s, multiple)
+        hist[cap] = hist.get(cap, 0) + 1
+    caps = sorted(hist)
+    counts = [hist[c] for c in caps]
+    while len(caps) > max_buckets:
+        # merging cap i into cap i+1 pads each of its count_i elements by
+        # at most (caps[i+1] - caps[i]) extra rows
+        costs = [(caps[i + 1] - caps[i]) * counts[i]
+                 for i in range(len(caps) - 1)]
+        i = costs.index(min(costs))
+        counts[i + 1] += counts[i]
+        del caps[i], counts[i]
+    return tuple(caps)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest planned bucket that fits ``n``.  Overflow raises (same
+    explicit-contract behavior as ``collate_task_batch`` with a fixed
+    size): a stream element larger than every planned cap means the
+    histogram the plan was built from is stale — recompute the plan rather
+    than silently minting a new compiled shape."""
+    for b in buckets:
+        if n <= b:
+            return b
+    raise ValueError(f"size {n} exceeds every planned bucket {tuple(buckets)}; "
+                     f"re-plan buckets from a fresh stream histogram")
+
+
+def collate_with_buckets(tasks: Sequence[Task],
+                         support_buckets: Sequence[int],
+                         query_buckets: Sequence[int]) -> TaskBatch:
+    """Collate against planned buckets: pad targets are the smallest
+    support/query caps covering the batch maxima, so every batch from the
+    stream lands on one of ``len(support_buckets) * len(query_buckets)``
+    compiled shapes."""
+    return collate_task_batch(
+        tasks,
+        support_size=bucket_for(max(t.n_support for t in tasks),
+                                support_buckets),
+        query_size=bucket_for(max(t.n_query for t in tasks), query_buckets))
 
 
 def collate_task_batch(tasks: Sequence[Task],
@@ -154,6 +223,83 @@ def task_batch_at(key: jax.Array, cfg: EpisodicImageConfig,
     the contract repro.train.loop relies on for checkpoint-exact restarts."""
     return sample_image_task_batch(jax.random.fold_in(key, step), cfg,
                                    tasks_per_step)
+
+
+# ---------------------------------------------------------------------------
+# Host-side task source (the production-loader stand-in)
+# ---------------------------------------------------------------------------
+#
+# Real episodic datasets (ORBIT video frames, VTAB images) are decoded,
+# augmented, and collated on the HOST.  ``host_task_batch_at`` is the numpy
+# twin of the device-side synthetic sampler: same class-blob task family,
+# but all work runs in plain numpy (large GIL-releasing ops) so a
+# :class:`repro.train.pipeline.Prefetcher` can overlap it with device
+# compute — the device-side ``task_batch_at`` serializes with the train
+# step on the accelerator queue and has nothing to overlap.
+
+
+@dataclasses.dataclass(frozen=True)
+class HostEpisodicConfig:
+    """Host (numpy) episodic image stream.  ``augment`` adds the standard
+    loader work — random crop (from ``image_size + crop_pad``), horizontal
+    flip, per-image standardization — all vectorized over the batch."""
+
+    way: int = 5
+    shot: int = 10
+    query_per_class: int = 10
+    image_size: int = 32
+    channels: int = 3
+    class_sep: float = 0.5
+    noise: float = 1.5
+    augment: bool = True
+    crop_pad: int = 4
+
+
+def host_task_batch_at(seed: int, cfg: HostEpisodicConfig,
+                       tasks_per_step: int, step: int) -> TaskBatch:
+    """Deterministic host-side batch-for-step: a pure function of
+    (seed, cfg, step) — the same restart-exactness contract as
+    ``task_batch_at``, built on a counter-based PRNG
+    (``np.random.SeedSequence([seed, step])``) so any step is
+    reconstructible in isolation."""
+    rng = np.random.Generator(np.random.PCG64(
+        np.random.SeedSequence([seed, step])))
+    t, way, c = tasks_per_step, cfg.way, cfg.channels
+    per = cfg.shot + cfg.query_per_class
+    big = cfg.image_size + (cfg.crop_pad if cfg.augment else 0)
+    # class prototype: low-freq pattern upsampled 2x (numpy nearest);
+    # built at ceil(big/2) and cropped so odd sizes work too
+    base = rng.standard_normal(
+        (t, way, (big + 1) // 2, (big + 1) // 2, c)).astype(np.float32)
+    base = base.repeat(2, axis=2).repeat(2, axis=3)[:, :, :big, :big]
+    base *= cfg.class_sep / np.sqrt((base ** 2).mean() + 1e-8)
+    noise = cfg.noise * rng.standard_normal(
+        (t, way, per, big, big, c)).astype(np.float32)
+    x = (base[:, :, None] + noise).reshape(t * way * per, big, big, c)
+    if cfg.augment:
+        m, img = x.shape[0], cfg.image_size
+        oy = rng.integers(0, cfg.crop_pad + 1, m)
+        ox = rng.integers(0, cfg.crop_pad + 1, m)
+        iy = oy[:, None] + np.arange(img)
+        ix = ox[:, None] + np.arange(img)
+        x = x[np.arange(m)[:, None, None], iy[:, :, None], ix[:, None, :]]
+        flip = rng.integers(0, 2, m).astype(bool)
+        x[flip] = x[flip, :, ::-1]
+        mu = x.mean(axis=(1, 2), keepdims=True)
+        sd = x.std(axis=(1, 2), keepdims=True) + 1e-6
+        x = (x - mu) / sd
+    img = cfg.image_size
+    x = x.reshape(t, way, per, img, img, c)
+    sx = np.ascontiguousarray(
+        x[:, :, :cfg.shot].reshape(t, way * cfg.shot, img, img, c))
+    qx = np.ascontiguousarray(
+        x[:, :, cfg.shot:].reshape(t, way * cfg.query_per_class, img, img, c))
+    sy = np.tile(np.repeat(np.arange(way), cfg.shot), (t, 1)).astype(np.int32)
+    qy = np.tile(np.repeat(np.arange(way), cfg.query_per_class),
+                 (t, 1)).astype(np.int32)
+    ones = lambda y: np.ones(y.shape, np.float32)
+    return TaskBatch(support_x=sx, support_y=sy, query_x=qx, query_y=qy,
+                     support_mask=ones(sy), query_mask=ones(qy), way=way)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -12,15 +12,20 @@ straggler monitoring — is exercised end to end.
 ``--episodic`` switches to the paper's workload: task-batched LITE
 meta-training (repro.core.episodic_train) on the synthetic episodic image
 stream, with ``--tasks-per-step`` tasks per optimizer step and the task
-axis optionally sharded over ``--dp-shards`` devices:
+axis optionally sharded over ``--dp-shards`` devices.  The throughput
+engine knobs: ``--prefetch N`` (background batch lookahead; default 2),
+``--no-donate`` (disable in-place params/opt-state updates),
+``--data-source host`` (host-side numpy collation the prefetcher can
+overlap with device compute), ``--schedule cosine|wsd`` (per-step lr),
+and ``--lite-dtype bfloat16`` (mixed-precision no-grad complement):
 
     PYTHONPATH=src python -m repro.launch.train --episodic \
-        --steps 100 --tasks-per-step 8 --dp-shards 1
+        --steps 100 --tasks-per-step 8 --dp-shards 1 \
+        --data-source host --prefetch 4 --schedule cosine
 """
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +36,7 @@ from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig
 from repro.launch.mesh import (make_dp_mesh, make_production_mesh,
                                make_test_mesh)
-from repro.optim.schedules import cosine_schedule, wsd_schedule
+from repro.optim.schedules import schedule_for
 from repro.sharding import rules
 from repro.sharding.ctx import P
 from repro.train.checkpoint import CheckpointManager
@@ -45,19 +50,26 @@ def run_episodic(args) -> None:
     from repro.core.lite import LiteSpec
     from repro.core.meta_learners import MetaLearnerConfig, make_learner
     from repro.core.set_encoder import SetEncoderConfig
-    from repro.data.episodic import EpisodicImageConfig, task_batch_at
+    from repro.data.episodic import (EpisodicImageConfig, HostEpisodicConfig,
+                                     host_task_batch_at, task_batch_at)
     from repro.models.conv_backbone import (ConvBackboneConfig,
                                             make_conv_backbone)
     from repro.optim import AdamWConfig
 
-    if args.schedule is not None:
-        print(f"[warn] --schedule {args.schedule} is ignored by --episodic "
-              f"(constant lr {args.peak_lr}); LR schedules are an open item")
     meta = MetaTrainConfig(tasks_per_step=args.tasks_per_step,
-                           dp_shards=args.dp_shards, lr=args.peak_lr)
+                           dp_shards=args.dp_shards, lr=args.peak_lr,
+                           schedule=args.schedule,
+                           warmup_steps=max(args.steps // 50, 1),
+                           total_steps=args.steps,
+                           lite_dtype=args.lite_dtype,
+                           prefetch=args.prefetch,
+                           donate=not args.no_donate)
     mesh = make_dp_mesh(meta.dp_shards) if meta.dp_shards > 1 else None
     print(f"episodic meta-training: learner={args.learner} "
           f"tasks_per_step={meta.tasks_per_step} dp_shards={meta.dp_shards} "
+          f"schedule={meta.schedule or 'constant'} "
+          f"prefetch={meta.prefetch} donate={meta.donate} "
+          f"lite_dtype={meta.lite_dtype or 'float32'} "
           f"devices={len(jax.devices())}")
 
     backbone = make_conv_backbone(ConvBackboneConfig(widths=(16, 32),
@@ -67,7 +79,8 @@ def run_episodic(args) -> None:
         backbone,
         SetEncoderConfig(kind="conv", conv_blocks=2, conv_width=16,
                          task_dim=32))
-    lite = LiteSpec(h=meta.lite_h, chunk_size=meta.lite_chunk)
+    lite = LiteSpec(h=meta.lite_h, chunk_size=meta.lite_chunk,
+                    compute_dtype=meta.lite_dtype)
     adamw = AdamWConfig(weight_decay=0.0)
 
     init = make_episodic_init_state(learner, adamw)
@@ -75,14 +88,26 @@ def run_episodic(args) -> None:
     state = init(jax.random.key(0))
     state_abs = jax.eval_shape(init, jax.random.key(0))
 
-    tcfg = EpisodicImageConfig(way=5, shot=10, query_per_class=6,
-                               image_size=args.image_size)
-    data_key = jax.random.key(17)
     step_key = jax.random.key(23)
+    if args.data_source == "host":
+        # host-side collation+augmentation — the path the prefetcher can
+        # genuinely overlap with device compute
+        hcfg = HostEpisodicConfig(way=5, shot=10, query_per_class=6,
+                                  image_size=args.image_size)
 
-    def batch_at(s):
-        return dict(tasks=task_batch_at(data_key, tcfg, meta.tasks_per_step, s),
-                    key=jax.random.fold_in(step_key, s))
+        def batch_at(s):
+            return dict(tasks=host_task_batch_at(17, hcfg,
+                                                 meta.tasks_per_step, s),
+                        key=jax.random.fold_in(step_key, s))
+    else:
+        tcfg = EpisodicImageConfig(way=5, shot=10, query_per_class=6,
+                                   image_size=args.image_size)
+        data_key = jax.random.key(17)
+
+        def batch_at(s):
+            return dict(tasks=task_batch_at(data_key, tcfg,
+                                            meta.tasks_per_step, s),
+                        key=jax.random.fold_in(step_key, s))
 
     # distinct default dir per workload AND per learner: restoring a
     # checkpoint into a different state template is a shape mismatch
@@ -90,7 +115,8 @@ def run_episodic(args) -> None:
     ckpt = CheckpointManager(ckpt_dir, keep=3)
     result = train(state, step, batch_at, args.steps, ckpt=ckpt,
                    ckpt_every=args.ckpt_every, state_template=state_abs,
-                   log_every=max(args.steps // 10, 1))
+                   log_every=max(args.steps // 10, 1),
+                   prefetch=meta.prefetch, donate=meta.donate)
     if not result.metrics_history:
         print(f"nothing to do: checkpoint already at step {result.step} "
               f"(resumed_from={result.resumed_from})")
@@ -109,8 +135,8 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--schedule", choices=["cosine", "wsd"], default=None,
-                    help="LR schedule (LM path; default cosine). "
-                         "--episodic trains at constant --peak-lr")
+                    help="LR schedule (LM default cosine; --episodic "
+                         "default constant --peak-lr)")
     ap.add_argument("--peak-lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default=None,
                     help="defaults to /tmp/repro_train_ckpt (LM) or "
@@ -126,6 +152,19 @@ def main() -> None:
     ap.add_argument("--tasks-per-step", type=int, default=8)
     ap.add_argument("--dp-shards", type=int, default=1)
     ap.add_argument("--image-size", type=int, default=24)
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="background batch lookahead depth (0 = sync loop)")
+    ap.add_argument("--data-source", choices=["device", "host"],
+                    default="device",
+                    help="episodic task stream: jitted on-device sampler, "
+                         "or host-side numpy collation+augmentation (the "
+                         "loader-realistic path prefetch can overlap)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="disable params/opt-state buffer donation")
+    ap.add_argument("--lite-dtype", choices=["bfloat16", "float16"],
+                    default=None,
+                    help="LITE no-grad complement compute dtype "
+                         "(default fp32)")
     args = ap.parse_args()
 
     if args.episodic:
@@ -145,15 +184,8 @@ def main() -> None:
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} devices={n_dev}")
 
     init = make_init_state(cfg, adamw_for(cfg))
-    if args.schedule == "wsd":
-        sched = functools.partial(wsd_schedule, peak=args.peak_lr,
-                                  warmup_steps=max(args.steps // 50, 1),
-                                  stable_steps=int(args.steps * 0.8),
-                                  decay_steps=max(int(args.steps * 0.18), 1))
-    else:
-        sched = functools.partial(cosine_schedule, peak=args.peak_lr,
-                                  warmup_steps=max(args.steps // 50, 1),
-                                  total_steps=args.steps)
+    sched = schedule_for(args.schedule or "cosine", args.peak_lr,
+                         max(args.steps // 50, 1), args.steps)
     step = make_train_step(cfg, adamw_for(cfg), schedule=sched)
 
     # sharded state init

@@ -26,3 +26,28 @@ def wsd_schedule(step, peak: float, warmup_steps: int, stable_steps: int,
     decay = peak * jnp.exp(jnp.log(final_frac) * t)
     return jnp.where(step < warmup_steps, warm,
                      jnp.where(in_decay, decay, peak))
+
+
+def schedule_for(name, peak: float, warmup_steps: int, total_steps: int):
+    """Resolve a schedule name into a ``step -> lr`` callable.
+
+    ``None`` returns None (constant-lr contract); 'cosine' and 'wsd' use
+    the launcher's standard shape derivation (wsd: 80% stable, 18% decay
+    of ``total_steps``).  The step argument is the optimizer update count,
+    so resuming from a checkpoint lands on the same lr."""
+    import functools
+
+    if name is None:
+        return None
+    if total_steps <= 0:
+        raise ValueError(f"schedule={name!r} needs total_steps > 0")
+    if name == "cosine":
+        return functools.partial(cosine_schedule, peak=peak,
+                                 warmup_steps=warmup_steps,
+                                 total_steps=total_steps)
+    if name == "wsd":
+        return functools.partial(
+            wsd_schedule, peak=peak, warmup_steps=warmup_steps,
+            stable_steps=int(total_steps * 0.8),
+            decay_steps=max(int(total_steps * 0.18), 1))
+    raise ValueError(f"unknown schedule {name!r} (None|'cosine'|'wsd')")

@@ -10,6 +10,25 @@ Design for 1000+ nodes (DESIGN.md §5):
     slow host; here the signal is logged and surfaced in TrainResult);
   * preemption is injected via an optional hook for tests (the loop
     raises exactly as a SIGTERM handler would).
+
+Throughput engine (PR2):
+  * ``prefetch=k`` overlaps host-side ``batch_at(step)`` collation and
+    H2D transfer with device compute via a background
+    :class:`repro.train.pipeline.Prefetcher`, and the loop stops
+    hard-syncing every step — it only blocks on ``log_every``/checkpoint
+    boundaries (plus the first and last step), letting the runtime queue
+    dispatches ahead.  Determinism is untouched: the prefetcher evaluates
+    the same pure ``batch_at`` stream in order, so resume stays bit-exact.
+  * ``donate=True`` donates the state argument to the jitted step
+    (``donate_argnums=0``): params and optimizer state update in place
+    instead of being copied each step.  The caller's initial ``state``
+    buffers are consumed by the first step — thread the returned
+    ``TrainResult.state``, never the original.
+  * step-time accounting is per COMMITTED step: between hard syncs the
+    loop measures wall-clock for the whole span and attributes the
+    average to each step in it, so ``TrainResult.throughput()`` reports
+    real tasks/sec, not per-dispatch latency (which under async dispatch
+    would be a meaningless few microseconds).
 """
 from __future__ import annotations
 
@@ -21,6 +40,7 @@ import jax
 import numpy as np
 
 from repro.train.checkpoint import CheckpointManager
+from repro.train.pipeline import Prefetcher
 
 PyTree = Any
 
@@ -57,7 +77,14 @@ class TrainResult:
 
     def throughput(self, items_per_step: int = 1, skip: int = 1) -> float:
         """items/sec over the run, excluding the first ``skip`` (compile)
-        steps — the task-batched launcher reports tasks/sec with this."""
+        steps — the task-batched launcher reports tasks/sec with this.
+
+        ``step_times[i]`` is wall-clock per COMMITTED step: under async
+        dispatch (``train(prefetch=...)``) the loop only syncs at span
+        boundaries and spreads the measured span time uniformly over its
+        steps, so this ratio reflects end-to-end throughput rather than
+        dispatch latency.  The first step is always its own span (hard
+        sync), so ``skip=1`` cleanly drops compile time."""
         times = self.step_times[skip:] or self.step_times
         if not times:
             return 0.0
@@ -73,10 +100,25 @@ def train(state: PyTree,
           ckpt_every: int = 50,
           state_template: Optional[PyTree] = None,
           preemption_hook: Optional[Callable[[int], None]] = None,
-          log_every: int = 0) -> TrainResult:
+          log_every: int = 0,
+          prefetch: int = 0,
+          donate: bool = False,
+          max_span: int = 64) -> TrainResult:
     """Run (and resume) training.  ``batch_at(step)`` must be deterministic
     in ``step`` — together with checkpointed state that is what makes
-    restarts exact."""
+    restarts exact.
+
+    ``prefetch > 0`` builds batches on a background thread ``prefetch``
+    steps ahead and switches the loop to async dispatch: hard sync only on
+    log/checkpoint boundaries, bounded by ``max_span`` so dispatch
+    run-ahead (queued executions + their pinned batch buffers + pending
+    metrics) can never grow with ``num_steps``.  Within a span the
+    straggler monitor only sees the span-average step time — a single
+    slow step inside a long span is smeared out; shorten ``log_every`` /
+    ``max_span`` where per-step straggler attribution matters.
+    ``donate=True`` donates the state to the jitted step so params/opt
+    state update in place — the caller's input ``state`` is consumed by
+    the first step."""
     start = 0
     resumed_from = None
     if ckpt is not None and state_template is not None:
@@ -84,26 +126,52 @@ def train(state: PyTree,
         if restored is not None:
             start, state, _ = restored
             resumed_from = start
-    step_fn = jax.jit(train_step)
+    step_fn = jax.jit(train_step, donate_argnums=(0,) if donate else ())
     monitor = StragglerMonitor()
     history: List[Dict] = []
     step_times: List[float] = []
 
-    for step in range(start, num_steps):
-        if preemption_hook is not None:
-            preemption_hook(step)        # may raise (simulated SIGTERM)
-        t0 = time.time()
-        state, metrics = step_fn(state, batch_at(step))
-        jax.block_until_ready(jax.tree.leaves(state)[0])
-        dt = time.time() - t0
-        step_times.append(dt)
-        monitor.observe(step, dt)
-        if log_every and (step % log_every == 0):
-            m = {k: float(v) for k, v in metrics.items()}
-            print(f"step {step}: {m}", flush=True)
-        history.append({k: float(v) for k, v in metrics.items()})
-        if ckpt is not None and (step + 1) % ckpt_every == 0:
-            ckpt.save(step + 1, state)
+    source = batch_at
+    pf = None
+    if prefetch > 0 and start < num_steps:
+        pf = Prefetcher(batch_at, start, num_steps, depth=prefetch)
+        source = pf.get
+    try:
+        pending: List[Dict] = []      # dispatched, not yet committed
+        span_t0: Optional[float] = None
+        span_start = start
+        for step in range(start, num_steps):
+            if preemption_hook is not None:
+                preemption_hook(step)    # may raise (simulated SIGTERM)
+            if span_t0 is None:
+                span_t0 = time.time()
+                span_start = step
+            state, metrics = step_fn(state, source(step))
+            pending.append(metrics)
+            # In sync mode every step is a span; async mode syncs only on
+            # the first step (isolates compile), log/ckpt boundaries, and
+            # the final step.
+            sync = (prefetch == 0 or step == start or step == num_steps - 1
+                    or (log_every and step % log_every == 0)
+                    or (ckpt is not None and (step + 1) % ckpt_every == 0)
+                    or len(pending) >= max(max_span, 1))
+            if sync:
+                jax.block_until_ready(jax.tree.leaves(state)[0])
+                per = (time.time() - span_t0) / (step - span_start + 1)
+                for s in range(span_start, step + 1):
+                    step_times.append(per)
+                    monitor.observe(s, per)
+                history.extend({k: float(v) for k, v in m.items()}
+                               for m in pending)
+                pending.clear()
+                span_t0 = None
+                if log_every and step % log_every == 0:
+                    print(f"step {step}: {history[-1]}", flush=True)
+            if ckpt is not None and (step + 1) % ckpt_every == 0:
+                ckpt.save(step + 1, state)
+    finally:
+        if pf is not None:
+            pf.close()
 
     if ckpt is not None:
         ckpt.save(num_steps, state)

@@ -90,8 +90,11 @@ def make_episodic_train_step(learner, lite, meta_cfg,
                              adamw_cfg: AdamWConfig = None,
                              mesh=None, dp_axis: str = "data") -> Callable:
     """meta_cfg: repro.configs.base.MetaTrainConfig (tasks_per_step is the
-    data side's concern; dp_shards>1 requires ``mesh``)."""
+    data side's concern; dp_shards>1 requires ``mesh``).  A configured
+    ``meta_cfg.schedule`` replaces the constant lr with a per-step lr
+    keyed on the optimizer update count."""
     from repro.core.episodic_train import make_batched_meta_train_step
+    from repro.optim.schedules import schedule_for
 
     adamw_cfg = adamw_cfg or AdamWConfig(weight_decay=0.0)
     if meta_cfg.dp_shards > 1 and mesh is None:
@@ -100,6 +103,8 @@ def make_episodic_train_step(learner, lite, meta_cfg,
     inner = make_batched_meta_train_step(
         learner, lite, adamw=adamw_cfg, lr=meta_cfg.lr,
         max_grad_norm=meta_cfg.max_grad_norm,
+        schedule=schedule_for(meta_cfg.schedule, meta_cfg.lr,
+                              meta_cfg.warmup_steps, meta_cfg.total_steps),
         mesh=mesh if meta_cfg.dp_shards > 1 else None, dp_axis=dp_axis)
 
     def train_step(state: State, batch: Dict) -> Tuple[State, Dict]:
