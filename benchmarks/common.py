@@ -25,6 +25,18 @@ def emit(rows: Iterable[dict], name: str) -> None:
     print("\n".join(lines))
 
 
+def time_median(fn: Callable, iters: int) -> float:
+    """Median wall seconds over ``iters`` runs after one warmup/compile
+    call.  The caller's ``fn`` must block on its own results."""
+    fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2]
+
+
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall time in microseconds."""
     for _ in range(warmup):

@@ -11,6 +11,7 @@ MODULES = (
     "benchmarks.table2_vary_h",        # paper Table 2 / D.4-D.6
     "benchmarks.table1_adaptation_cost",  # paper Table 1 adaptation cost
     "benchmarks.memory_vs_h",          # paper §D.4 memory-vs-|H| claim
+    "benchmarks.serve_throughput",     # episodic serving engine throughput
     "benchmarks.kernel_bench",         # Pallas kernels vs jnp reference
     "benchmarks.roofline_report",      # dry-run roofline table (§Roofline)
 )

@@ -1,0 +1,190 @@
+"""Episodic serving throughput: tasks adapted/sec, queries/sec, state-cache
+hit-rate, and the compile counter over a ragged request stream.
+
+Three comparisons:
+
+* ``adapt_loop`` vs ``adapt_batch`` — per-task ``learner.adapt`` dispatches
+  vs ONE vmapped ``adapt_batch`` over the same T tasks (the serving
+  engine's adaptation path).
+* ``query_loop`` vs ``query_batch`` — per-task ``predict`` dispatches vs
+  ONE micro-batched ``predict_batch`` (the engine's per-step dispatch).
+* ``engine_cold`` vs ``engine_warm`` — the full EpisodicServeEngine on a
+  request stream of distinct users, then the SAME users again: warm
+  traffic skips adaptation via the LRU task-state cache, and the compile
+  counters must not grow.
+
+    PYTHONPATH=src python benchmarks/serve_throughput.py
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from common import emit, time_median  # noqa: E402
+
+from repro.core.episodic import index_task_state, stack_task_states
+from repro.core.episodic_train import task_key
+from repro.core.lite import LiteSpec
+from repro.core.meta_learners import MetaLearnerConfig, make_learner
+from repro.core.set_encoder import SetEncoderConfig
+from repro.data.episodic import (EpisodicImageConfig, collate_task_batch,
+                                 plan_buckets, sample_image_task)
+from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
+from repro.serve.episodic import EpisodicRequest, EpisodicServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=8)
+    ap.add_argument("--way", type=int, default=5)
+    ap.add_argument("--shot", type=int, default=4)
+    ap.add_argument("--query", type=int, default=4)
+    ap.add_argument("--image-size", type=int, default=12)
+    ap.add_argument("--iters", type=int, default=9)
+    ap.add_argument("--engine-requests", type=int, default=12)
+    args = ap.parse_args()
+
+    backbone = make_conv_backbone(ConvBackboneConfig(widths=(8,),
+                                                     feature_dim=16))
+    learner = make_learner(
+        MetaLearnerConfig(kind="protonets", way=args.way), backbone,
+        SetEncoderConfig(kind="conv", conv_blocks=1, conv_width=8,
+                         task_dim=16))
+    params = learner.init(jax.random.key(0))
+    lite = LiteSpec(exact=True, chunk_size=32)
+    t_count = args.tasks
+
+    cfg = EpisodicImageConfig(way=args.way, shot=args.shot,
+                              query_per_class=args.query,
+                              image_size=args.image_size)
+    tasks = [sample_image_task(jax.random.key(100 + i), cfg)
+             for i in range(t_count)]
+    batch = collate_task_batch(tasks)
+    key = jax.random.key(7)
+    keys = jax.vmap(lambda i: task_key(key, i))(jnp.arange(t_count))
+    n_q = int(batch.query_x.shape[1])
+
+    def blank(r):
+        return dict(mode=r["mode"], tasks=r.get("tasks", ""),
+                    tasks_per_sec=r.get("tasks_per_sec", ""),
+                    queries_per_sec=r.get("queries_per_sec", ""),
+                    speedup=r.get("speedup", ""),
+                    hit_rate=r.get("hit_rate", ""),
+                    adapt_compiles=r.get("adapt_compiles", ""),
+                    predict_compiles=r.get("predict_compiles", ""))
+
+    rows = []
+
+    # -- adaptation: per-task loop vs one vmapped dispatch -------------------
+    adapt_one = jax.jit(lambda p, sx, sy, k, m: learner.adapt(
+        p, sx, sy, key=k, lite=lite, mask=m))
+
+    def run_adapt_loop():
+        sts = [adapt_one(params, batch.support_x[i], batch.support_y[i],
+                         keys[i], batch.support_mask[i])
+               for i in range(t_count)]
+        jax.block_until_ready(sts)
+        return sts
+
+    adapt_b = jax.jit(lambda p, b, k: learner.adapt_batch(p, b, k, lite))
+
+    def run_adapt_batch():
+        return jax.block_until_ready(adapt_b(params, batch, keys))
+
+    t_loop = time_median(run_adapt_loop, args.iters)
+    t_batch = time_median(run_adapt_batch, args.iters)
+    rows.append(blank(dict(mode="adapt_loop", tasks=t_count,
+                           tasks_per_sec=round(t_count / t_loop, 1),
+                           speedup=1.0)))
+    rows.append(blank(dict(mode="adapt_batch", tasks=t_count,
+                           tasks_per_sec=round(t_count / t_batch, 1),
+                           speedup=round(t_loop / t_batch, 2))))
+
+    # -- query scoring: per-task loop vs one micro-batched dispatch ----------
+    states = run_adapt_batch()
+    per_states = [index_task_state(states, i) for i in range(t_count)]
+    pred_one = jax.jit(learner.predict)
+    pred_b = jax.jit(learner.predict_batch)
+    states_stacked = stack_task_states(per_states)
+
+    def run_query_loop():
+        out = [pred_one(params, per_states[i], batch.query_x[i])
+               for i in range(t_count)]
+        jax.block_until_ready(out)
+
+    def run_query_batch():
+        jax.block_until_ready(pred_b(params, states_stacked, batch.query_x))
+
+    t_qloop = time_median(run_query_loop, args.iters)
+    t_qbatch = time_median(run_query_batch, args.iters)
+    rows.append(blank(dict(mode="query_loop", tasks=t_count,
+                           queries_per_sec=round(t_count * n_q / t_qloop, 1),
+                           speedup=1.0)))
+    rows.append(blank(dict(mode="query_batch", tasks=t_count,
+                           queries_per_sec=round(t_count * n_q / t_qbatch, 1),
+                           speedup=round(t_qloop / t_qbatch, 2))))
+
+    # -- full engine: cold stream, then the same users warm ------------------
+    def make_requests():
+        return [EpisodicRequest(uid=i, support_x=np.asarray(t.support_x),
+                                support_y=np.asarray(t.support_y),
+                                query_x=np.asarray(t.query_x), way=args.way)
+                for i, t in enumerate(
+                    sample_image_task(jax.random.key(500 + i), cfg)
+                    for i in range(args.engine_requests))]
+
+    buckets = plan_buckets([args.way * args.shot], max_buckets=1)
+    engine = EpisodicServeEngine(learner, params, lite=lite, n_slots=4,
+                                 query_chunk=8, support_buckets=buckets,
+                                 cache_capacity=args.engine_requests)
+    cold = make_requests()
+    t0 = time.perf_counter()
+    engine.run_to_completion(cold)
+    dt_cold = time.perf_counter() - t0
+    s_cold = engine.stats()
+
+    warm = [EpisodicRequest(uid=r.uid, query_x=np.asarray(r.query_x),
+                            way=args.way)
+            for r in cold]                      # repeat visitors, no support
+    t0 = time.perf_counter()
+    engine.run_to_completion(warm)
+    dt_warm = time.perf_counter() - t0
+    s_warm = engine.stats()
+
+    n_req = args.engine_requests
+    n_queries = sum(r.n_queries for r in cold)
+    rows.append(blank(dict(
+        mode="engine_cold", tasks=n_req,
+        tasks_per_sec=round(s_cold["tasks_adapted"] / dt_cold, 1),
+        queries_per_sec=round(n_queries / dt_cold, 1),
+        hit_rate=round(s_cold["hit_rate"], 3),
+        adapt_compiles=s_cold["adapt_compiles"],
+        predict_compiles=s_cold["predict_compiles"])))
+    rows.append(blank(dict(
+        mode="engine_warm", tasks=n_req,
+        queries_per_sec=round(n_queries / dt_warm, 1),
+        speedup=round(dt_cold / dt_warm, 2),
+        hit_rate=round(
+            (s_warm["cache_hits"] - s_cold["cache_hits"]) /
+            max(n_req, 1), 3),
+        adapt_compiles=s_warm["adapt_compiles"],
+        predict_compiles=s_warm["predict_compiles"])))
+
+    emit(rows, "serve_throughput")
+    print(f"# adapt_batch speedup over per-task adapt loop: "
+          f"{t_loop / t_batch:.2f}x")
+    print(f"# predict_batch speedup over per-task query loop: "
+          f"{t_qloop / t_qbatch:.2f}x")
+    print(f"# warm (cached) pass speedup over cold: "
+          f"{dt_cold / dt_warm:.2f}x; compile counters flat: "
+          f"{s_warm['adapt_compiles'] == s_cold['adapt_compiles']}")
+
+
+if __name__ == "__main__":
+    main()

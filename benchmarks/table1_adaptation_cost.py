@@ -39,6 +39,8 @@ def run() -> list:
         adapt = jax.jit(lambda p, sx, sy: lr.adapt(p, sx, sy))
         lowered = adapt.lower(params, task.support_x, task.support_y)
         cost = lowered.compile().cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):      # newer jax: list of dicts
+            cost = cost[0] if cost else {}
         macs = float(cost.get("flops", 0.0)) / 2.0
         wall_us = time_call(adapt, params, task.support_x, task.support_y)
         rows.append(dict(model=kind, adapt_macs=f"{macs:.3e}",

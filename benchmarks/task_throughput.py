@@ -20,13 +20,12 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
 
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
-from common import emit  # noqa: E402
+from common import emit, time_median  # noqa: E402
 
 from repro.core.episodic_train import (make_batched_meta_train_step,
                                        make_meta_train_step, task_key)
@@ -87,16 +86,6 @@ def main() -> None:
                                query_per_class=args.query,
                                image_size=args.image_size)
     key = jax.random.key(7)
-
-    def time_median(fn, iters: int) -> float:
-        """median-of-N wall seconds (N runs after one warmup/compile)."""
-        fn()
-        ts = []
-        for _ in range(iters):
-            t0 = time.perf_counter()
-            fn()
-            ts.append(time.perf_counter() - t0)
-        return sorted(ts)[len(ts) // 2]
 
     # -- baseline: paper Algorithm 1, one jitted step per task, Python loop
     loop_step = jax.jit(make_meta_train_step(learner, spec, adamw=adamw))

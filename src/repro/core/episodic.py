@@ -104,6 +104,22 @@ def validate_task_batch(batch: TaskBatch) -> None:
     assert batch.query_mask.shape == batch.query_y.shape
 
 
+def stack_task_states(states) -> PyTree:
+    """Stack single-task adapted states into a *task-state batch* — the
+    pytree ``learner.predict_batch`` consumes: every leaf gains a leading
+    task axis.  The inverse of :func:`index_task_state`.  All states must
+    share treedef and leaf shapes (same learner kind, way, and pad
+    buckets) — exactly what the serving engine's slot discipline
+    guarantees."""
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *states)
+
+
+def index_task_state(states: PyTree, i: int) -> PyTree:
+    """One member state of a task-state batch (leading-axis index ``i``) —
+    what the serving engine's LRU cache stores per task uid."""
+    return jax.tree.map(lambda a: a[i], states)
+
+
 def query_batches(task: Task, batch_size: int):
     """Split the query set into ceil(M / batch_size) padded batches plus a
     per-example weight mask (Algorithm 1's outer loop).  Returns

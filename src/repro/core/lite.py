@@ -293,9 +293,47 @@ def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
     return straight_through(full, sum_h, _masked_scale(mask, h))
 
 
+def serve_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
+              spec: LiteSpec, mask: jnp.ndarray | None = None) -> PyTree:
+    """Serve-time twin of :func:`lite_sum`: the EXACT masked sum, computed
+    the way LITE computes its complement — forward-only under
+    ``stop_gradient``, in ``spec.chunk_size``-bounded chunks, optionally in
+    low precision (``spec.compute_dtype``) with fp32 accumulation.
+
+    Adaptation at serve time is a pure forward pass ("just a few
+    optimization steps or a single forward pass" per new task — there is no
+    meta-gradient to estimate), so the H-subset machinery is unnecessary:
+    what LITE contributes at serve is the *memory* discipline of its
+    complement pass, which lets a 1000-image support set adapt under the
+    same O(chunk) activation bound as training.  ``key`` and
+    ``spec.h``/``spec.exact`` are accepted (signature-compatible with
+    ``lite_sum`` so learners thread it through the same estimator sites)
+    but ignored.
+
+    With ``chunk_size=None`` the value is bit-identical to exact
+    ``lite_sum`` (same masked encode, same single ``jnp.sum``); chunking
+    only reassociates the cross-chunk accumulation.
+    """
+    del key  # nothing is subsampled
+    if mask is None:
+        mask = _ones_mask_like(xs)
+    enc_w = _masked_encode(encode_fn)
+    frozen = tree_stop_gradient(params)
+    xs = tree_stop_gradient(xs)
+    accum = None
+    if spec.compute_dtype is not None:
+        cd = jnp.dtype(spec.compute_dtype)
+        frozen = tree_cast(frozen, cd)
+        xs = tree_cast(xs, cd)
+        accum = jnp.float32
+    return _chunked_nograd_sum(enc_w, frozen, (xs, mask), spec.chunk_size,
+                               accum_dtype=accum)
+
+
 def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
                      ys: jnp.ndarray, num_classes: int, key: jax.Array,
-                     spec: LiteSpec, mask: jnp.ndarray | None = None
+                     spec: LiteSpec, mask: jnp.ndarray | None = None,
+                     sum_fn: Callable | None = None
                      ) -> Tuple[PyTree, jnp.ndarray]:
     """LITE estimator of per-class sums  S_c = sum_n 1(y_n = c) e(x_n).
 
@@ -303,6 +341,10 @@ def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
     means/covariances) and CNAPs' class-pooled classifier generator.  A single
     global N/H rescale keeps every class-sum unbiased because the H draw is
     uniform over ALL support indices:  E[sum_{h} 1(y=c) de] = (H/N) * S'_c.
+
+    ``sum_fn`` swaps the underlying set-sum estimator (default
+    :func:`lite_sum`); :func:`serve_segment_sum` passes :func:`serve_sum`
+    for the forward-only serve path.
 
     Returns (class_sums pytree with leading axis C, counts[C] float32).
     Counts are exact (labels are not subsampled).
@@ -327,8 +369,20 @@ def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
                                  onehot.astype(e.dtype)), enc
         )
 
-    sums = lite_sum(seg_encode, params, (xs, onehot_all), key, spec, mask=mask)
+    sums = (sum_fn or lite_sum)(seg_encode, params, (xs, onehot_all), key,
+                                spec, mask=mask)
     return sums, counts
+
+
+def serve_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
+                      ys: jnp.ndarray, num_classes: int, key: jax.Array,
+                      spec: LiteSpec, mask: jnp.ndarray | None = None
+                      ) -> Tuple[PyTree, jnp.ndarray]:
+    """Serve-time twin of :func:`lite_segment_sum`: exact per-class sums via
+    :func:`serve_sum` — forward-only, chunked, optional low-precision
+    compute with fp32 accumulation.  See ``serve_sum`` for the contract."""
+    return lite_segment_sum(encode_fn, params, xs, ys, num_classes, key,
+                            spec, mask=mask, sum_fn=serve_sum)
 
 
 def lite_value_and_grad(loss_fn: Callable, argnums: int = 0):

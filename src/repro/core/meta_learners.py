@@ -6,8 +6,28 @@ All learners are pure functions over explicit param pytrees:
     learner = make_learner(cfg, backbone)
     params  = learner.init(key)
     loss, metrics = learner.meta_loss(params, task, key, lite_spec)
-    task_state    = learner.adapt(params, support_x, support_y, key)   # test
-    logits        = learner.predict(params, task_state, query_x)
+
+Test-time adaptation speaks ONE uniform, mask-aware batched contract for
+every learner kind (the episodic serving engine's API; repro.serve.episodic
+dispatches thousands of personalization requests through it):
+
+    states = learner.adapt_batch(params, task_batch, keys, lite)  # (T, ...)
+    logits = learner.predict_batch(params, states, query_x)       # (T, M, way)
+
+``adapt_batch`` vmaps over the padded task axis of a
+:class:`repro.core.episodic.TaskBatch` with per-task PRNG keys and honors
+the collator's support masks, so a padded batch adapts bit-exactly like
+its member tasks; the returned *task-state batch* is the single-task state
+pytree with a leading task axis (stack/index helpers live in
+repro.core.episodic).  At serve time adaptation is forward-only, so the
+aggregating learners run the LITE-chunked exact estimators
+(repro.core.lite.serve_sum / serve_segment_sum): support activations stay
+O(chunk) no matter how many images the support set holds, and
+``LiteSpec.compute_dtype`` down-casts the chunk compute with fp32
+accumulation.  Thin single-task wrappers remain for the training path:
+
+    task_state = learner.adapt(params, support_x, support_y, key)
+    logits     = learner.predict(params, task_state, query_x)
 
 LITE enters at every support-set aggregation site (the paper's Eqs. 2-5):
 the set-encoder pooling and the class-pooled feature statistics.  The
@@ -31,9 +51,10 @@ import jax.numpy as jnp
 
 from repro.common.init import lecun_normal
 from repro.common.tree import tree_stop_gradient
-from repro.core.episodic import Task
+from repro.core.episodic import Task, TaskBatch
 from repro.core.film import generate_film_params, init_film_generator
 from repro.core.lite import (LiteSpec, lite_segment_sum, lite_sum,
+                             serve_segment_sum, serve_sum,
                              subsampled_task_sum)
 from repro.core.set_encoder import (SetEncoderConfig, encode_set,
                                     init_set_encoder)
@@ -66,6 +87,53 @@ class MetaLearner:
     meta_loss: Callable[..., Tuple[jnp.ndarray, Dict]]
     adapt: Callable[..., PyTree]
     predict: Callable[[PyTree, PyTree, jnp.ndarray], jnp.ndarray]
+    # uniform batched serving contract (vmapped over the padded task axis;
+    # see _batched_api): every learner kind serves through these two.
+    adapt_batch: Callable[..., PyTree]
+    predict_batch: Callable[[PyTree, PyTree, jnp.ndarray], jnp.ndarray]
+
+
+def _batched_api(adapt_one: Callable, predict: Callable
+                 ) -> Tuple[Callable, Callable, Callable]:
+    """Build the uniform batched contract from a mask-aware single-task
+    ``adapt_one(params, sx, sy, mask, key, lite) -> task_state``.
+
+    Returns ``(adapt, adapt_batch, predict_batch)``:
+
+    * ``adapt(params, sx, sy, key=None, lite=..., mask=None)`` — the thin
+      single-task wrapper (training/eval path; old call sites unchanged).
+    * ``adapt_batch(params, batch: TaskBatch, keys, lite=...)`` — vmaps
+      adaptation over the padded task axis with per-task keys, honoring the
+      collator's support masks.  Returns a *task-state batch*: the
+      single-task state pytree with a leading task axis on every leaf
+      (stack/index via repro.core.episodic.stack_task_states /
+      index_task_state).
+    * ``predict_batch(params, states, qx)`` — vmaps query scoring over
+      (state, query) pairs; ``qx`` is (T, M, ...) padded queries, result is
+      (T, M, way) logits.
+
+    Both batched entry points are plain vmaps of the same single-task
+    functions at identical padded shapes, which is what makes batched
+    serving bit-exact vs the per-task path.
+    """
+
+    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True),
+              mask=None):
+        key = jax.random.key(0) if key is None else key
+        return adapt_one(params, sx, sy, mask, key, lite)
+
+    def adapt_batch(params, batch: TaskBatch, keys,
+                    lite: LiteSpec = LiteSpec(exact=True)):
+        def one(sx, sy, sm, k):
+            return adapt_one(params, sx, sy, sm, k, lite)
+
+        return jax.vmap(one)(batch.support_x, batch.support_y,
+                             batch.support_mask, keys)
+
+    def predict_batch(params, states, qx):
+        return jax.vmap(lambda st, q: predict(params, st, q))(states, qx)
+
+    return adapt, adapt_batch, predict_batch
 
 
 def _xent(logits: jnp.ndarray, labels: jnp.ndarray,
@@ -118,14 +186,17 @@ def make_protonets(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
         return loss, dict(
             accuracy=_accuracy(logits, task.query_y, task.query_mask))
 
-    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
-        key = jax.random.key(0) if key is None else key
-        return _prototypes(params, sx, sy, key, lite)
+    def adapt_one(params, sx, sy, mask, key, lite: LiteSpec):
+        # forward-only serve estimator: exact prototypes, chunked, no grad
+        return _prototypes(params, sx, sy, key, lite, serve_segment_sum,
+                           mask=mask)
 
     def predict(params, task_state, qx):
         return _logits(params, task_state, qx)
 
-    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict)
+    adapt, adapt_batch, predict_batch = _batched_api(adapt_one, predict)
+    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict,
+                       adapt_batch, predict_batch)
 
 
 # ===========================================================================
@@ -249,14 +320,19 @@ def _make_cnaps_family(cfg: MetaLearnerConfig, bb: BackboneDef,
         return loss, dict(
             accuracy=_accuracy(logits, task.query_y, task.query_mask))
 
-    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
-        key = jax.random.key(0) if key is None else key
-        return _configure(params, sx, sy, key, lite)
+    def adapt_one(params, sx, sy, mask, key, lite: LiteSpec):
+        # forward-only serve estimators at both aggregation sites (set
+        # encoder pooling + class statistics): exact, chunked, no grad
+        return _configure(params, sx, sy, key, lite,
+                          sum_estimator=serve_sum,
+                          seg_estimator=serve_segment_sum, mask=mask)
 
     def predict(params, task_state, qx):
         return _logits(params, task_state, qx)
 
-    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict)
+    adapt, adapt_batch, predict_batch = _batched_api(adapt_one, predict)
+    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict,
+                       adapt_batch, predict_batch)
 
 
 # naive small-task estimators (paper's Fig-4 baseline) with matching signatures
@@ -331,13 +407,16 @@ def make_fomaml(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
         return loss, dict(
             accuracy=_accuracy(logits, task.query_y, task.query_mask))
 
-    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True)):
-        return _inner_adapt(params, sx, sy)
+    def adapt_one(params, sx, sy, mask, key, lite: LiteSpec):
+        del key, lite  # inner SGD is deterministic; no aggregation sites
+        return _inner_adapt(params, sx, sy, mask)
 
     def predict(params, task_state, qx):
         return _logits_p(task_state, qx)
 
-    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict)
+    adapt, adapt_batch, predict_batch = _batched_api(adapt_one, predict)
+    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict,
+                       adapt_batch, predict_batch)
 
 
 # ===========================================================================
@@ -350,8 +429,9 @@ def make_finetuner(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
     def init(key):
         return dict(bb=bb.init(key))
 
-    def adapt(params, sx, sy, key=None, lite: LiteSpec = LiteSpec(exact=True),
-              sw=None):
+    def adapt_one(params, sx, sy, mask, key, lite: LiteSpec):
+        del key, lite
+        sw = mask
         feats = bb.features(tree_stop_gradient(params["bb"]), sx, None)
         feats = jax.lax.stop_gradient(feats).astype(jnp.float32)
         head = dict(w=jnp.zeros((fdim, cfg.way)), b=jnp.zeros((cfg.way,)))
@@ -372,13 +452,15 @@ def make_finetuner(cfg: MetaLearnerConfig, bb: BackboneDef) -> MetaLearner:
         return qf @ head["w"] + head["b"]
 
     def meta_loss(params, task: Task, key, lite: LiteSpec, estimator=None):
-        head = adapt(params, task.support_x, task.support_y,
-                     sw=task.support_mask)
+        head = adapt_one(params, task.support_x, task.support_y,
+                         task.support_mask, key, lite)
         logits = predict(params, head, task.query_x)
         return _xent(logits, task.query_y, task.query_mask), dict(
             accuracy=_accuracy(logits, task.query_y, task.query_mask))
 
-    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict)
+    adapt, adapt_batch, predict_batch = _batched_api(adapt_one, predict)
+    return MetaLearner(cfg, bb, init, meta_loss, adapt, predict,
+                       adapt_batch, predict_batch)
 
 
 # ===========================================================================

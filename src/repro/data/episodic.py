@@ -201,6 +201,28 @@ def collate_task_batch(tasks: Sequence[Task],
     )
 
 
+def iter_query_chunks(query_x: np.ndarray, chunk: int
+                      ) -> Iterator[Tuple[np.ndarray, np.ndarray, int]]:
+    """Split a request's query stream into fixed-shape ``(chunk, ...)``
+    pieces: yields ``(padded_chunk, mask, n_real)`` per piece, tail
+    zero-padded with a float32 validity mask.  The serve-side twin of
+    :func:`repro.core.episodic.query_batches` (which is device-side for
+    Algorithm 1's training loop): host numpy, streamed lazily, so the
+    episodic serving engine's micro-batcher pulls one fixed-shape piece per
+    live task per step and every ``predict_batch`` dispatch lands on one
+    compiled shape."""
+    if chunk < 1:
+        raise ValueError(f"query chunk must be >= 1, got {chunk}")
+    q = np.asarray(query_x)
+    for s in range(0, q.shape[0], chunk):
+        piece = q[s:s + chunk]
+        n = piece.shape[0]
+        if n < chunk:
+            piece = np.pad(piece,
+                           [(0, chunk - n)] + [(0, 0)] * (piece.ndim - 1))
+        yield piece, (np.arange(chunk) < n).astype(np.float32), n
+
+
 @functools.partial(jax.jit, static_argnums=(1, 2))
 def sample_image_task_batch(key: jax.Array, cfg: EpisodicImageConfig,
                             num_tasks: int) -> TaskBatch:

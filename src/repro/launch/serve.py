@@ -1,11 +1,24 @@
 """Production serving launcher: continuous-batching decode over the
-uniform cache API.
+uniform cache API, and episodic adapt-many-tasks personalization serving.
+
+LM token decode (default):
 
     PYTHONPATH=src python -m repro.launch.serve --arch zamba2-7b \
         --requests 8 --slots 4 --max-new 16
 
-Runs the smoke config on this container; on a TPU slice the same engine
-serves the full config (params sharded by repro.sharding.rules — see
+Episodic personalization (``--episodic``): each request is a support set
+to adapt on + a query stream to answer; all four learner kinds serve
+through the same batched ``adapt_batch``/``predict_batch`` contract, with
+LITE-chunked forward-only adaptation, an LRU task-state cache keyed by
+task uid (``--repeat-frac`` controls how much of the traffic is repeat
+users), and micro-batched query dispatch:
+
+    PYTHONPATH=src python -m repro.launch.serve --episodic \
+        --learner protonets --requests 16 --slots 4 --shot 10 \
+        --repeat-frac 0.5 --lite-chunk 32
+
+Runs the smoke config on this container; on a TPU slice the same engines
+serve the full config (params sharded by repro.sharding.rules — see
 EXPERIMENTS.md §Perf cell 2 for the topology guidance: size the slice so
 weights are resident, don't decode one stream set on a full pod).
 """
@@ -22,6 +35,74 @@ from repro.models.registry import get_api
 from repro.serve.engine import Request, ServeEngine
 
 
+def run_episodic(args) -> None:
+    from repro.core.lite import LiteSpec
+    from repro.core.meta_learners import MetaLearnerConfig, make_learner
+    from repro.core.set_encoder import SetEncoderConfig
+    from repro.data.episodic import (EpisodicImageConfig, plan_buckets,
+                                     sample_image_task)
+    from repro.models.conv_backbone import (ConvBackboneConfig,
+                                            make_conv_backbone)
+    from repro.serve.episodic import EpisodicRequest, EpisodicServeEngine
+
+    backbone = make_conv_backbone(ConvBackboneConfig(widths=(16, 32),
+                                                     feature_dim=64))
+    learner = make_learner(
+        MetaLearnerConfig(kind=args.learner, way=5), backbone,
+        SetEncoderConfig(kind="conv", conv_blocks=2, conv_width=16,
+                         task_dim=32))
+    params = learner.init(jax.random.key(0))
+    lite = LiteSpec(exact=True, chunk_size=args.lite_chunk,
+                    compute_dtype=args.lite_dtype)
+
+    # synthetic personalization traffic: exactly n_users distinct users
+    # visit first (cold), then the remaining repeat_frac of requests
+    # revisit them (warm; supports still attached, as real clients send —
+    # the engine skips adaptation on the cache hit)
+    rng = np.random.default_rng(0)
+    n_users = max(1, round(args.requests * (1.0 - args.repeat_frac)))
+    n_users = min(n_users, args.requests)
+    cfg = EpisodicImageConfig(way=5, shot=args.shot, query_per_class=4,
+                              image_size=args.image_size)
+    def request_for(uid):
+        t = sample_image_task(jax.random.key(uid), cfg)
+        return EpisodicRequest(uid=uid, support_x=np.asarray(t.support_x),
+                               support_y=np.asarray(t.support_y),
+                               query_x=np.asarray(t.query_x))
+
+    cold = [request_for(uid) for uid in range(n_users)]
+    warm = [request_for(int(rng.integers(0, n_users)))
+            for _ in range(args.requests - n_users)]
+    reqs = cold + warm
+    buckets = plan_buckets([r.support_x.shape[0] for r in reqs],
+                           max_buckets=2)
+
+    engine = EpisodicServeEngine(learner, params, lite=lite,
+                                 n_slots=args.slots,
+                                 query_chunk=args.query_chunk,
+                                 support_buckets=buckets)
+    # cold wave first so every warm request finds its user's state cached
+    # regardless of slot count — warm traffic measures the cache, not
+    # admission-wave luck
+    t0 = time.time()
+    engine.run_to_completion(cold)
+    engine.run_to_completion(warm)
+    dt = time.time() - t0
+    s = engine.stats()
+    assert all(r.done for r in reqs)
+    print(f"episodic serve: learner={args.learner} {len(reqs)} requests "
+          f"({n_users} distinct users) in {dt:.2f}s on {args.slots} slots")
+    print(f"  tasks adapted {s['tasks_adapted']} "
+          f"({s['tasks_adapted']/dt:.1f}/s), "
+          f"queries {s['queries_served']} ({s['queries_served']/dt:.1f}/s), "
+          f"cache hit-rate {s['hit_rate']:.2f}, "
+          f"compiles adapt={s['adapt_compiles']} "
+          f"predict={s['predict_compiles']}")
+    for r in reqs[:4]:
+        print(f"  req uid={r.uid}: cache_hit={r.cache_hit} "
+              f"preds={r.predictions()[:8].tolist()}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="minitron-4b")
@@ -30,7 +111,27 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--episodic", action="store_true",
+                    help="adapt-many-tasks personalization serving")
+    ap.add_argument("--learner", default="protonets",
+                    choices=["protonets", "cnaps", "simple_cnaps", "fomaml",
+                             "finetuner"])
+    ap.add_argument("--shot", type=int, default=10)
+    ap.add_argument("--image-size", type=int, default=24)
+    ap.add_argument("--query-chunk", type=int, default=8)
+    ap.add_argument("--repeat-frac", type=float, default=0.5,
+                    help="fraction of requests from repeat users "
+                         "(task-state cache hits)")
+    ap.add_argument("--lite-chunk", type=int, default=32,
+                    help="LITE serve-time adaptation chunk size")
+    ap.add_argument("--lite-dtype", choices=["bfloat16", "float16"],
+                    default=None,
+                    help="serve-time adaptation compute dtype")
     args = ap.parse_args()
+
+    if args.episodic:
+        run_episodic(args)
+        return
 
     cfg = get_smoke_config(args.arch)
     api = get_api(cfg)

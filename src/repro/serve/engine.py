@@ -4,8 +4,15 @@ the same ``init_cache/prefill/decode_step`` contract).
 
 The engine keeps one padded decode batch live; requests join by having
 their prompt prefilled into a slot's cache region and leave on EOS/max
-tokens.  On TPU the decode step is the latency-bound program the roofline
-decode cells measure; here it runs the same code on CPU at smoke scale.
+tokens.  Active slots whose caches agree on decode position are stacked
+into ONE batched decode dispatch per step (the per-slot path remains as
+the fallback for ragged joins).  On TPU the decode step is the
+latency-bound program the roofline decode cells measure; here it runs the
+same code on CPU at smoke scale.
+
+This engine speaks LM token decode only; the episodic adapt-many-tasks
+workload (support set in, query logits out) is served by its sibling
+:class:`repro.serve.episodic.EpisodicServeEngine`.
 """
 from __future__ import annotations
 
@@ -34,13 +41,15 @@ class ServeEngine:
     """Single-host reference engine (batch = n_slots, one sequence each)."""
 
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
-                 max_seq: int = 256, eos_id: Optional[int] = None, seed: int = 0):
+                 max_seq: int = 256, eos_id: Optional[int] = None,
+                 seed: int = 0, batched_decode: bool = True):
         self.cfg = cfg
         self.params = params
         self.api = get_api(cfg)
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.eos_id = eos_id
+        self.batched_decode = batched_decode
         self._key = jax.random.key(seed)
 
         # per-slot independent caches (batch axis = 1) so prefill results
@@ -48,6 +57,11 @@ class ServeEngine:
         self._caches = [self.api.init_cache(cfg, 1, max_seq)
                         for _ in range(n_slots)]
         self._reqs: List[Optional[Request]] = [None] * n_slots
+        # resident stacked cache for an unchanged decoding cohort:
+        # (active slot list, stacked cache).  Re-stacking / un-stacking
+        # copies every slot's full max_seq cache region, so it happens only
+        # when the cohort changes, not per token.
+        self._stacked: Optional[tuple] = None
 
         self._prefill = jax.jit(
             lambda p, b: self.api.prefill(p, b, cfg))
@@ -66,6 +80,7 @@ class ServeEngine:
         slot = self._free_slot()
         if slot is None:
             return False
+        self._flush_stacked()          # a splice changes the cohort
         batch = dict(tokens=jnp.asarray(req.prompt, jnp.int32)[None, :])
         if self.cfg.frontend is not None:
             batch["frontend_embeds"] = jnp.zeros(
@@ -78,7 +93,9 @@ class ServeEngine:
         full = _splice_cache(full, cache, plen, self.cfg)
         self._caches[slot] = full
         self._reqs[slot] = req
-        req.out_tokens.append(self._sample(logits, req)[0])
+        # the prefill-sampled token counts against the budget and may be
+        # EOS — _commit retires the request (and frees the slot) if so
+        self._commit(slot, logits)
         return True
 
     def _sample(self, logits: jnp.ndarray, req: Request) -> List[int]:
@@ -88,35 +105,109 @@ class ServeEngine:
         draw = jax.random.categorical(sub, logits / req.temperature, axis=-1)
         return [int(t) for t in np.asarray(draw).ravel()]
 
+    # -- decode --------------------------------------------------------------
+
+    def _stack_caches(self, caches: List[Dict]) -> Optional[Dict]:
+        """Concatenate per-slot (batch=1) caches along the batch axis into
+        one decode batch.  Stacking requires every slot to agree on the
+        scalar decode position ``len`` (positions/attention spans are
+        shared across the batch) and on leaf shapes; a ragged mix — e.g.
+        a freshly spliced prompt joining mid-cohort — returns None and the
+        caller decodes per slot."""
+        first = caches[0]
+        try:
+            if any(sorted(c.keys()) != sorted(first.keys()) for c in caches):
+                return None
+            if any(int(c["len"]) != int(first["len"]) for c in caches[1:]):
+                return None
+            out = {}
+            for k in first:
+                if k == "len":
+                    out[k] = first[k]
+                    continue
+                leaves = [c[k] for c in caches]
+                if any(l.ndim < 2 or l.shape != leaves[0].shape
+                       for l in leaves):
+                    return None
+                out[k] = jnp.concatenate(leaves, axis=1)
+            return out
+        except (TypeError, AttributeError):
+            return None
+
+    @staticmethod
+    def _unstack_cache(cache: Dict, n: int) -> List[Dict]:
+        return [{k: (v if k == "len" else v[:, j:j + 1])
+                 for k, v in cache.items()} for j in range(n)]
+
+    def _flush_stacked(self) -> None:
+        """Write the resident stacked cache back into the per-slot caches
+        (called whenever the decoding cohort is about to change)."""
+        if self._stacked is None:
+            return
+        cohort, cache = self._stacked
+        self._stacked = None
+        slot_caches = self._unstack_cache(cache, len(cohort))
+        for j, i in enumerate(cohort):
+            self._caches[i] = slot_caches[j]
+
+    def _commit(self, i: int, logits: jnp.ndarray) -> None:
+        """Sample + append the next token for slot ``i``; retire on EOS or
+        length budget."""
+        req = self._reqs[i]
+        nxt = self._sample(logits, req)[0]
+        req.out_tokens.append(nxt)
+        if (len(req.out_tokens) >= req.max_new_tokens or
+                (self.eos_id is not None and nxt == self.eos_id)):
+            req.done = True
+            self._reqs[i] = None
+
     def step(self) -> int:
-        """One decode step over all active slots. Returns #active."""
+        """One decode step over all active slots — a single stacked decode
+        dispatch when the slot caches stack (finished slots are already
+        masked out of the active set), the per-slot loop otherwise.  The
+        stacked cache stays resident while the cohort is unchanged, so
+        steady-state decode does no per-token stack/unstack copies.
+        Returns #active."""
         active = [i for i, r in enumerate(self._reqs) if r is not None]
         if not active:
             return 0
-        for i in active:
-            req = self._reqs[i]
-            tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
-            logits, self._caches[i] = self._decode(self.params,
-                                                   self._caches[i], tok)
-            nxt = self._sample(logits, req)[0]
-            req.out_tokens.append(nxt)
-            if (len(req.out_tokens) >= req.max_new_tokens or
-                    (self.eos_id is not None and nxt == self.eos_id)):
-                req.done = True
-                self._reqs[i] = None
+        stacked = None
+        if self.batched_decode and len(active) > 1:
+            if self._stacked is not None and self._stacked[0] == active:
+                stacked = self._stacked[1]         # unchanged cohort
+            else:
+                self._flush_stacked()
+                stacked = self._stack_caches([self._caches[i]
+                                              for i in active])
+        else:
+            self._flush_stacked()
+        if stacked is not None:
+            toks = jnp.asarray([[self._reqs[i].out_tokens[-1]]
+                                for i in active], jnp.int32)
+            logits, new_cache = self._decode(self.params, stacked, toks)
+            self._stacked = (list(active), new_cache)
+            # sample in slot order (same key-consumption order as the
+            # per-slot fallback, so seeded runs are path-independent)
+            for j, i in enumerate(active):
+                self._commit(i, logits[j:j + 1])
+        else:
+            for i in active:
+                req = self._reqs[i]
+                tok = jnp.asarray([[req.out_tokens[-1]]], jnp.int32)
+                logits, self._caches[i] = self._decode(self.params,
+                                                       self._caches[i], tok)
+                self._commit(i, logits)
         return len(active)
 
     def run_to_completion(self, requests: List[Request],
                           max_steps: int = 10000) -> List[Request]:
         pending = list(requests)
-        done: List[Request] = []
         steps = 0
         while (pending or any(r is not None for r in self._reqs)) \
                 and steps < max_steps:
-            while pending and self._free_slot() is not None:
-                self.add_request(pending.pop(0))
+            while pending and self.add_request(pending[0]):
+                pending.pop(0)
             self.step()
-            done.extend(r for r in requests if r.done and r not in done)
             steps += 1
         return requests
 

@@ -1,0 +1,345 @@
+"""Episodic serving engine: adapt-many-tasks personalization serving.
+
+The LM engine (repro.serve.engine) serves token decode; this engine serves
+the paper's test-time workload — ORBIT-style per-user personalization at
+traffic scale.  A request is one episode: a support set to adapt on and a
+query stream to answer.  The paper's headline tradeoff is that
+meta-learners are cheap here ("just a few optimization steps or a single
+forward pass" per new task); this engine turns that per-task cheapness
+into throughput:
+
+* **Slotted scheduler** — up to ``n_slots`` live tasks, continuous
+  admission (requests join as slots free), in the spirit of
+  :class:`repro.serve.engine.ServeEngine`.
+* **Batched adaptation** — slots awaiting adaptation are collated into
+  padded :class:`repro.core.episodic.TaskBatch` es and adapted in one
+  ``learner.adapt_batch`` dispatch per planned support bucket: the
+  uniform, mask-aware batched contract all four learner kinds share.  A
+  task's pad cap comes from its OWN support size and its PRNG key is
+  ``task_key(base, uid)``, so a task's state is a pure function of
+  (params, support, uid) — recomputing equals the cache, regardless of
+  co-tenants.
+* **LITE-chunked forward-only adaptation** — the aggregating learners run
+  the serve estimators (repro.core.lite.serve_sum / serve_segment_sum):
+  exact values, no-grad chunks, so a 1000-image support set adapts under
+  an O(chunk_size) activation bound, optionally in
+  ``LiteSpec.compute_dtype`` with fp32 accumulation.
+* **LRU task-state cache** — adapted states keyed by task uid; a repeat
+  request (same user, new queries) skips adaptation entirely and may even
+  omit its support set.
+* **Query micro-batching** — each step serves the next fixed-size query
+  chunk of EVERY live task in ONE ``predict_batch`` dispatch.
+* **Compile discipline** — both dispatches go through a per-shape AOT
+  cache (:class:`repro.train.pipeline.BucketedStepCache`), and every
+  dispatch is padded to the full ``n_slots`` task lanes + a planned
+  support bucket + the fixed query chunk, so a ragged request stream hits
+  a closed set of compiled shapes (``stats()`` exposes the counters) AND
+  results are bit-exact regardless of how requests are co-scheduled (the
+  program never changes shape, only lane occupancy).
+
+    engine = EpisodicServeEngine(learner, params, n_slots=4,
+                                 support_buckets=(64,), query_chunk=8)
+    engine.run_to_completion([EpisodicRequest(uid=0, support_x=sx,
+                                              support_y=sy, query_x=qx)])
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.episodic import (Task, index_task_state, stack_task_states)
+from repro.core.episodic_train import task_key
+from repro.core.lite import LiteSpec
+from repro.core.meta_learners import MetaLearner
+from repro.data.episodic import (bucket_for, collate_task_batch,
+                                 iter_query_chunks)
+from repro.train.pipeline import BucketedStepCache
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class EpisodicRequest:
+    """One personalization episode.
+
+    ``uid`` is the task identity (the state-cache key): two requests with
+    the same uid are the same task, and the second may omit its support
+    set entirely if the first's state is still cached.  ``query_x`` is the
+    query stream — served in engine-sized chunks, logits accumulated in
+    arrival order."""
+
+    uid: int
+    query_x: np.ndarray                          # (M, ...) query stream
+    support_x: Optional[np.ndarray] = None       # (N, ...); None ok on a
+    support_y: Optional[np.ndarray] = None       # (N,)     expected cache hit
+    way: int = 5
+    logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+    served: int = 0
+    cache_hit: Optional[bool] = None             # set at admission
+    done: bool = False
+
+    @property
+    def n_queries(self) -> int:
+        return int(np.asarray(self.query_x).shape[0])
+
+    def all_logits(self) -> np.ndarray:
+        """(M, way) logits in query order (complete once ``done``)."""
+        if not self.logits:
+            return np.zeros((0, self.way), np.float32)
+        return np.concatenate(self.logits, axis=0)
+
+    def predictions(self) -> np.ndarray:
+        return np.argmax(self.all_logits(), axis=-1)
+
+
+class TaskStateCache:
+    """LRU cache of adapted task states keyed by task uid."""
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self._d: "collections.OrderedDict[int, PyTree]" = \
+            collections.OrderedDict()
+
+    def get(self, uid: int) -> Optional[PyTree]:
+        if uid in self._d:
+            self._d.move_to_end(uid)
+            self.hits += 1
+            return self._d[uid]
+        self.misses += 1
+        return None
+
+    def put(self, uid: int, state: PyTree) -> None:
+        self._d[uid] = state
+        self._d.move_to_end(uid)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    def __contains__(self, uid: int) -> bool:
+        return uid in self._d
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: EpisodicRequest
+    state: Optional[PyTree]                      # None => awaiting adaptation
+    stream: Iterator
+
+
+class EpisodicServeEngine:
+    """Single-host adapt-many-tasks engine over the batched TaskState
+    contract (``learner.adapt_batch`` / ``learner.predict_batch``).
+
+    ``support_buckets`` are the planned support pad caps
+    (:func:`repro.data.episodic.plan_buckets` builds them from a stream
+    histogram); a support set larger than every cap raises, same
+    stale-histogram contract as training-side collation.  All requests
+    must share the learner's ``way`` and one query trailing shape — one
+    engine per model input spec, as with the LM engine.
+    """
+
+    def __init__(self, learner: MetaLearner, params: PyTree, *,
+                 lite: Optional[LiteSpec] = None, n_slots: int = 4,
+                 query_chunk: int = 8,
+                 support_buckets: Sequence[int] = (64,),
+                 cache_capacity: int = 64, seed: int = 0):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.learner = learner
+        self.params = params
+        # serve-time default: exact forward values, chunk-bounded memory
+        self.lite = lite if lite is not None else LiteSpec(exact=True,
+                                                           chunk_size=32)
+        self.n_slots = n_slots
+        self.query_chunk = query_chunk
+        self.support_buckets = tuple(sorted(support_buckets))
+        self.cache = TaskStateCache(cache_capacity)
+        self._slots: List[Optional[_Slot]] = [None] * n_slots
+        self._base_key = jax.random.key(seed)
+        self._adapt = BucketedStepCache(
+            lambda p, batch, keys: learner.adapt_batch(p, batch, keys,
+                                                       self.lite))
+        self._predict = BucketedStepCache(
+            lambda p, states, qx: learner.predict_batch(p, states, qx))
+        # resident stacked states for an unchanged live cohort — slot
+        # states are immutable after adaptation, so the (n_slots, ...)
+        # predict-side stack is rebuilt only when a slot joins or retires
+        self._stacked_states: Optional[tuple] = None
+        self.tasks_adapted = 0
+        self.queries_served = 0
+        self.steps = 0
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                return i
+        return None
+
+    def add_request(self, req: EpisodicRequest) -> bool:
+        """Admit ``req`` into a free slot; False when all slots are live.
+        A cached state (same uid served before) is attached immediately —
+        the request never enters the adaptation batch.
+
+        A support-less request whose uid is not cached YET but is live in
+        another slot (its first visit is still in flight) is deferred
+        (False — re-offer after a step lands the state); the same request
+        with no in-flight producer either is an error, since nothing will
+        ever cache its state."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        if req.way != self.learner.cfg.way:
+            raise ValueError(f"request way={req.way} != learner way="
+                             f"{self.learner.cfg.way}")
+        if req.support_x is None and req.uid not in self.cache:
+            if any(s is not None and s.req.uid == req.uid
+                   for s in self._slots):
+                return False
+            raise ValueError(f"request uid={req.uid}: no cached task state "
+                             f"and no support set to adapt on")
+        state = self.cache.get(req.uid)
+        req.cache_hit = state is not None
+        self._slots[slot] = _Slot(
+            req=req, state=state,
+            stream=iter_query_chunks(req.query_x, self.query_chunk))
+        return True
+
+    # -- the two batched dispatches ------------------------------------------
+
+    def _adapt_pending(self) -> None:
+        """One adapt_batch dispatch per support-bucket group of slots
+        awaiting adaptation, each padded to n_slots task lanes.  A task's
+        pad cap is chosen by its OWN support size — never by its
+        co-tenants' — so the adapted (and cached) state is a pure function
+        of (params, support, uid) and co-scheduling stays bit-exact even
+        with several planned buckets."""
+        need = [i for i, s in enumerate(self._slots)
+                if s is not None and s.state is None]
+        if not need:
+            return
+        groups: Dict[int, List[int]] = {}
+        for i in need:
+            n = int(np.asarray(self._slots[i].req.support_x).shape[0])
+            groups.setdefault(bucket_for(n, self.support_buckets),
+                              []).append(i)
+        for cap, idxs in sorted(groups.items()):
+            tasks, uids = [], []
+            for i in idxs:
+                r = self._slots[i].req
+                sx = np.asarray(r.support_x, np.float32)
+                # queries ride their own micro-batched dispatch; the
+                # collated task carries a 1-row dummy so the adapt shape
+                # key is fixed
+                tasks.append(Task(
+                    support_x=sx,
+                    support_y=np.asarray(r.support_y, np.int32),
+                    query_x=np.zeros((1,) + sx.shape[1:], np.float32),
+                    query_y=np.zeros((1,), np.int32), way=r.way))
+                uids.append(r.uid)
+            while len(tasks) < self.n_slots:   # fixed task-lane count
+                tasks.append(tasks[0])
+                uids.append(uids[0])
+            batch = collate_task_batch(tasks, support_size=cap, query_size=1)
+            keys = jax.vmap(lambda u: task_key(self._base_key, u))(
+                jnp.asarray(uids))
+            states = self._adapt(self.params, batch, keys)
+            for lane, i in enumerate(idxs):
+                st = index_task_state(states, lane)
+                self._slots[i].state = st
+                self.cache.put(self._slots[i].req.uid, st)
+            self.tasks_adapted += len(idxs)
+
+    def _serve_queries(self) -> int:
+        """ONE predict_batch dispatch serving the next query chunk of every
+        live task; empty lanes carry a filler state and zero queries."""
+        lanes = []                               # (slot_idx, chunk, n_real)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            item = next(s.stream, None)
+            if item is None:                     # stream exhausted (M == 0)
+                s.req.done = True
+                self._slots[i] = None
+                continue
+            chunk, _, n_real = item
+            lanes.append((i, chunk, n_real))
+        if not lanes:
+            return 0
+        chunk_shape = lanes[0][1].shape
+        if any(l[1].shape != chunk_shape for l in lanes):
+            raise ValueError("live tasks disagree on query trailing shape; "
+                             "one engine serves one model input spec")
+        qx = np.zeros((self.n_slots,) + chunk_shape, np.float32)
+        for lane, (i, chunk, _) in enumerate(lanes):
+            qx[lane] = chunk
+        cohort = tuple((i, self._slots[i].req.uid) for i, _, _ in lanes)
+        if (self._stacked_states is not None
+                and self._stacked_states[0] == cohort):
+            stacked = self._stacked_states[1]
+        else:
+            states = [self._slots[i].state for i, _, _ in lanes]
+            filler = states[0]                   # well-conditioned pad state
+            states.extend([filler] * (self.n_slots - len(lanes)))
+            stacked = stack_task_states(states)
+            self._stacked_states = (cohort, stacked)
+        logits = np.asarray(
+            self._predict(self.params, stacked, jnp.asarray(qx)))
+        served = 0
+        for lane, (i, _, n_real) in enumerate(lanes):
+            r = self._slots[i].req
+            r.logits.append(logits[lane, :n_real])
+            r.served += n_real
+            served += n_real
+            if r.served >= r.n_queries:
+                r.done = True
+                self._slots[i] = None
+        return served
+
+    def step(self) -> int:
+        """One engine step: batched adaptation of newly admitted tasks,
+        then one micro-batched query dispatch.  Returns #queries served."""
+        self._adapt_pending()
+        served = self._serve_queries()
+        self.queries_served += served
+        self.steps += 1
+        return served
+
+    def run_to_completion(self, requests: List[EpisodicRequest],
+                          max_steps: int = 100000) -> List[EpisodicRequest]:
+        pending = list(requests)
+        steps = 0
+        while (pending or any(s is not None for s in self._slots)) \
+                and steps < max_steps:
+            while pending and self.add_request(pending[0]):
+                pending.pop(0)
+            self.step()
+            steps += 1
+        return requests
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        lookups = self.cache.hits + self.cache.misses
+        return dict(
+            tasks_adapted=self.tasks_adapted,
+            queries_served=self.queries_served,
+            steps=self.steps,
+            cache_hits=self.cache.hits,
+            cache_misses=self.cache.misses,
+            hit_rate=self.cache.hits / lookups if lookups else 0.0,
+            adapt_compiles=self._adapt.compile_count,
+            predict_compiles=self._predict.compile_count,
+        )

@@ -1,12 +1,38 @@
-"""Serving engine: scheduling, cache splicing, greedy-decode correctness."""
+"""Serving engines.
+
+LM engine: scheduling, cache splicing, greedy-decode correctness, stacked
+batched decode, slot reuse, seeded sampling.
+
+Episodic engine: the uniform batched TaskState contract (adapt_batch /
+predict_batch) across all learner kinds, bit-exactness of batched vs
+per-task serving under padding, the LRU task-state cache, LITE-chunked
+forward-only adaptation, compile-counter flatness, and the tier-1 perf
+smoke (micro-batched predict beats the per-task query loop).
+"""
+import time
+
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.configs.registry import get_smoke_config
+from repro.core.episodic import index_task_state, stack_task_states
+from repro.core.episodic_train import task_key
+from repro.core.lite import LiteSpec, lite_sum, serve_sum
+from repro.core.meta_learners import MetaLearnerConfig, make_learner
+from repro.core.set_encoder import SetEncoderConfig
+from repro.data.episodic import (EpisodicImageConfig, collate_task_batch,
+                                 iter_query_chunks, sample_image_task)
+from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
 from repro.models.registry import get_api
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.episodic import (EpisodicRequest, EpisodicServeEngine,
+                                  TaskStateCache)
+
+# ---------------------------------------------------------------------------
+# LM engine
+# ---------------------------------------------------------------------------
 
 
 @pytest.mark.parametrize("arch", ["minitron-4b", "mamba2-780m", "gemma2-2b"])
@@ -56,3 +82,479 @@ def test_engine_mla_cache_splice(key):
                     max_new_tokens=4) for i in range(3)]
     out = eng.run_to_completion(reqs)
     assert all(r.done and len(r.out_tokens) == 4 for r in out)
+
+
+def test_prefill_splice_vs_token_by_token_decode(key):
+    """The engine's prefill-then-splice continuation must equal an
+    uninterrupted decode that fed the prompt token-by-token from an empty
+    cache — KV equivalence of the two cache construction paths."""
+    cfg = get_smoke_config("minitron-4b")
+    api = get_api(cfg)
+    params = api.init(key, cfg)
+    prompt = np.asarray([7, 2, 9, 4], np.int32)
+
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=32)
+    req = Request(uid=0, prompt=prompt, max_new_tokens=4)
+    eng.run_to_completion([req])
+
+    decode = jax.jit(lambda p, c, t: api.decode_step(p, c, t, cfg))
+    cache = api.init_cache(cfg, 1, 32)
+    logits = None
+    for t in prompt:
+        logits, cache = decode(params, cache,
+                               jnp.asarray([[int(t)]], jnp.int32))
+    want = []
+    for _ in range(4):
+        nxt = int(jnp.argmax(logits[0]))
+        want.append(nxt)
+        logits, cache = decode(params, cache,
+                               jnp.asarray([[nxt]], jnp.int32))
+    assert req.out_tokens == want, (req.out_tokens, want)
+
+
+def test_slot_reuse_after_eos(key):
+    """A slot freed by EOS must accept the next pending request, and the
+    late joiner's continuation must match a solo run (the splice resets
+    the slot's cache region)."""
+    cfg = get_smoke_config("minitron-4b")
+    api = get_api(cfg)
+    params = api.init(key, cfg)
+    p0 = np.asarray([3, 1, 4, 1, 5], np.int32)
+    p1 = np.asarray([2, 7, 1, 8, 2], np.int32)
+
+    # learn what request 0 greedily emits, then replay with its second
+    # token as EOS so the slot frees mid-stream
+    probe = Request(uid=0, prompt=p0, max_new_tokens=4)
+    ServeEngine(cfg, params, n_slots=1, max_seq=32).run_to_completion([probe])
+    eos = probe.out_tokens[1]
+
+    solo = Request(uid=1, prompt=p1, max_new_tokens=4)
+    ServeEngine(cfg, params, n_slots=1, max_seq=32).run_to_completion([solo])
+
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=32, eos_id=eos)
+    first = Request(uid=0, prompt=p0, max_new_tokens=4)
+    second = Request(uid=1, prompt=p1, max_new_tokens=4)
+    eng.run_to_completion([first, second])
+    assert first.done and first.out_tokens[-1] == eos
+    assert len(first.out_tokens) <= 2
+    assert second.done
+    # the reused slot serves the second request exactly as a fresh engine
+    # would (EOS may truncate it too if it greedily emits the same token)
+    want = solo.out_tokens
+    if eos in want:
+        want = want[: want.index(eos) + 1]
+    assert second.out_tokens == want, (second.out_tokens, want)
+
+
+def test_prefill_token_respects_budget_and_eos(key):
+    """The prefill-sampled first token counts against max_new_tokens and
+    is checked for EOS: max_new_tokens=1 emits exactly one token and a
+    prefill-emitted EOS retires the request before any decode step."""
+    cfg = get_smoke_config("minitron-4b")
+    api = get_api(cfg)
+    params = api.init(key, cfg)
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+
+    eng = ServeEngine(cfg, params, n_slots=1, max_seq=32)
+    one = Request(uid=0, prompt=prompt, max_new_tokens=1)
+    eng.run_to_completion([one])
+    assert one.done and len(one.out_tokens) == 1
+
+    eng2 = ServeEngine(cfg, params, n_slots=1, max_seq=32,
+                       eos_id=one.out_tokens[0])
+    req = Request(uid=1, prompt=prompt, max_new_tokens=8)
+    eng2.run_to_completion([req])
+    assert req.done and req.out_tokens == one.out_tokens
+
+
+def test_temperature_sampling_seeded_determinism(key):
+    """temperature>0 sampling is a pure function of the engine seed: same
+    seed => identical streams, different seed => different draws."""
+    cfg = get_smoke_config("minitron-4b")
+    api = get_api(cfg)
+    params = api.init(key, cfg)
+
+    def run(seed):
+        eng = ServeEngine(cfg, params, n_slots=2, max_seq=32, seed=seed)
+        reqs = [Request(uid=i, prompt=np.arange(4, dtype=np.int32) + i,
+                        max_new_tokens=6, temperature=0.8) for i in range(3)]
+        eng.run_to_completion(reqs)
+        return [r.out_tokens for r in reqs]
+
+    a, b, c = run(5), run(5), run(6)
+    assert a == b
+    assert a != c
+
+
+def test_batched_decode_matches_per_slot_fallback(key):
+    """A cohort of equal-length prompts decodes through the stacked path;
+    the result must match the engine with batching disabled token for
+    token (the stacked dispatch is a pure batching of the same programs)."""
+    cfg = get_smoke_config("minitron-4b")
+    api = get_api(cfg)
+    params = api.init(key, cfg)
+    prompts = [np.arange(5, dtype=np.int32) + 3 * i for i in range(2)]
+
+    def run(batched):
+        eng = ServeEngine(cfg, params, n_slots=2, max_seq=32,
+                          batched_decode=batched)
+        reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+                for i, p in enumerate(prompts)]
+        eng.run_to_completion(reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert run(True) == run(False)
+
+
+def test_stack_caches_refuses_ragged_positions(key):
+    """Slots at different decode positions cannot share one stacked decode
+    (``len`` is a scalar shared across the batch) — the engine must fall
+    back rather than mis-position a slot."""
+    cfg = get_smoke_config("minitron-4b")
+    api = get_api(cfg)
+    params = api.init(key, cfg)
+    eng = ServeEngine(cfg, params, n_slots=2, max_seq=32)
+    assert eng.add_request(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                                   max_new_tokens=8))
+    assert eng.add_request(Request(uid=1, prompt=np.arange(6, dtype=np.int32),
+                                   max_new_tokens=8))
+    caches = [c for c, r in zip(eng._caches, eng._reqs) if r is not None]
+    assert eng._stack_caches(caches) is None
+    # ...and the engine still completes both through the fallback
+    eng.run_to_completion([])
+    assert eng.step() == 0
+
+
+# ---------------------------------------------------------------------------
+# episodic engine: the batched TaskState contract
+# ---------------------------------------------------------------------------
+
+BB = make_conv_backbone(ConvBackboneConfig(widths=(4,), feature_dim=8))
+SET_CFG = SetEncoderConfig(kind="conv", conv_blocks=1, conv_width=4,
+                           task_dim=8)
+WAY = 3
+KINDS = ["protonets", "cnaps", "simple_cnaps", "fomaml", "finetuner"]
+SERVE_LITE = LiteSpec(exact=True, chunk_size=8)
+
+
+def _learner(kind):
+    return make_learner(MetaLearnerConfig(kind=kind, way=WAY,
+                                          inner_steps=2), BB, SET_CFG)
+
+
+def _tasks(n, shot=3, image_size=8, q=2, seed=100):
+    return [sample_image_task(
+        jax.random.key(seed + i),
+        EpisodicImageConfig(way=WAY, shot=shot, query_per_class=q,
+                            image_size=image_size)) for i in range(n)]
+
+
+def _max_leaf_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _requests(tasks, uids=None):
+    return [EpisodicRequest(uid=i if uids is None else uids[j],
+                            support_x=np.asarray(t.support_x),
+                            support_y=np.asarray(t.support_y),
+                            query_x=np.asarray(t.query_x), way=WAY)
+            for j, (i, t) in enumerate(enumerate(tasks))]
+
+
+# adapt_batch states that are bit-identical to the single-task adapt call;
+# fomaml's inner gradient loop and Simple CNAPs' cholesky/solve chain pick
+# up f32 reduction-order noise across batch widths (same concession as
+# test_padding_invariance_simple_cnaps_loss) — the *engine-level* bit-exact
+# guarantee for every kind is test_engine_coscheduling_is_bitexact, where
+# dispatch shapes are pinned to n_slots lanes.
+STATE_TOL = {"protonets": 0.0, "cnaps": 0.0, "finetuner": 0.0,
+             "fomaml": 1e-6, "simple_cnaps": 1e-4}
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_adapt_batch_matches_per_task_adapt(kind, key):
+    """The uniform contract: vmapped adapt_batch over a PADDED TaskBatch
+    reproduces the single-task ``adapt`` on each padded member (state
+    bit-exact for the aggregation learners), and predict_batch matches
+    per-task predict to XLA batch-width tolerance."""
+    lr = _learner(kind)
+    params = lr.init(key)
+    tasks = _tasks(3, shot=2) + _tasks(1, shot=4, seed=200)
+    batch = collate_task_batch(tasks, support_size=16, query_size=8)
+    keys = jax.vmap(lambda i: task_key(key, i))(jnp.arange(4))
+    states = jax.jit(lambda p, b, k: lr.adapt_batch(p, b, k, SERVE_LITE))(
+        params, batch, keys)
+    logits = jax.jit(lr.predict_batch)(params, states, batch.query_x)
+    assert logits.shape == (4, 8, WAY)
+    for i in range(4):
+        st = lr.adapt(params, batch.support_x[i], batch.support_y[i],
+                      key=keys[i], lite=SERVE_LITE,
+                      mask=batch.support_mask[i])
+        st_b = index_task_state(states, i)
+        assert _max_leaf_diff(st, st_b) <= STATE_TOL[kind]
+        lg = lr.predict(params, st, batch.query_x[i])
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits[i]),
+                                   rtol=5e-3, atol=5e-4)
+
+
+@pytest.mark.parametrize("kind", ["protonets", "simple_cnaps", "fomaml"])
+def test_padding_never_changes_adapted_state(kind, key):
+    """Same tasks collated to two different pad targets: identical
+    states (the mask-aware estimators make padding invisible)."""
+    lr = _learner(kind)
+    params = lr.init(key)
+    tasks = _tasks(2)
+    keys = jax.vmap(lambda i: task_key(key, i))(jnp.arange(2))
+    s1 = lr.adapt_batch(params, collate_task_batch(tasks, support_size=12,
+                                                   query_size=6),
+                        keys, SERVE_LITE)
+    s2 = lr.adapt_batch(params, collate_task_batch(tasks, support_size=24,
+                                                   query_size=6),
+                        keys, SERVE_LITE)
+    tol = 0.0 if kind != "simple_cnaps" else 1e-4
+    assert _max_leaf_diff(s1, s2) <= tol
+
+
+def test_serve_sum_matches_exact_lite_sum(key):
+    """serve_sum == exact lite_sum forward bit-for-bit when unchunked;
+    chunking only reassociates the accumulation (float tolerance); the
+    low-precision complement stays within bf16 rounding of fp32."""
+    p = dict(w=jax.random.normal(key, (12, 6)), b=jnp.zeros((6,)))
+    xs = jax.random.normal(jax.random.key(1), (20, 12))
+    k = jax.random.key(2)
+    mask = (jnp.arange(20) < 17).astype(jnp.float32)
+
+    exact = lite_sum(_mlp_encode, p, xs, k, LiteSpec(exact=True), mask=mask)
+    unchunked = serve_sum(_mlp_encode, p, xs, k, LiteSpec(exact=True),
+                          mask=mask)
+    assert _max_leaf_diff(exact, unchunked) == 0.0
+
+    chunked = serve_sum(_mlp_encode, p, xs, k,
+                        LiteSpec(exact=True, chunk_size=4), mask=mask)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(exact),
+                               rtol=1e-6, atol=1e-6)
+
+    bf16 = serve_sum(_mlp_encode, p, xs, k,
+                     LiteSpec(exact=True, chunk_size=4,
+                              compute_dtype="bfloat16"), mask=mask)
+    assert bf16.dtype == jnp.float32            # fp32 accumulation
+    np.testing.assert_allclose(np.asarray(bf16), np.asarray(exact),
+                               rtol=2e-2, atol=2e-2)
+
+
+def _mlp_encode(p, x):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+
+@pytest.mark.parametrize("kind", ["protonets", "cnaps"])
+def test_lite_chunked_serve_adapt_matches_unchunked(kind, key):
+    """Serve-time chunked adaptation (the 1000-image-support path) matches
+    the single-chunk exact adapt to float accumulation tolerance."""
+    lr = _learner(kind)
+    params = lr.init(key)
+    t = _tasks(1, shot=6)[0]
+    st_1 = lr.adapt(params, t.support_x, t.support_y, key=key,
+                    lite=LiteSpec(exact=True))
+    st_c = lr.adapt(params, t.support_x, t.support_y, key=key,
+                    lite=LiteSpec(exact=True, chunk_size=4))
+    for a, b in zip(jax.tree.leaves(st_1), jax.tree.leaves(st_c)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_iter_query_chunks_pads_and_masks():
+    chunks = list(iter_query_chunks(np.arange(10, dtype=np.float32)
+                                    .reshape(5, 2), 2))
+    assert len(chunks) == 3
+    last_x, last_m, n = chunks[-1]
+    assert last_x.shape == (2, 2) and n == 1
+    np.testing.assert_array_equal(last_m, [1.0, 0.0])
+    np.testing.assert_array_equal(last_x[1], 0.0)
+    assert list(iter_query_chunks(np.zeros((0, 2)), 4)) == []
+    with pytest.raises(ValueError, match="chunk"):
+        list(iter_query_chunks(np.zeros((3, 2)), 0))
+
+
+def test_task_state_cache_lru_eviction():
+    c = TaskStateCache(capacity=2)
+    c.put(1, "a"), c.put(2, "b")
+    assert c.get(1) == "a"          # 1 becomes most-recent
+    c.put(3, "c")                    # evicts 2
+    assert 2 not in c and 1 in c and 3 in c
+    assert c.get(2) is None
+    assert (c.hits, c.misses) == (1, 1)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_engine_serves_all_learner_kinds(kind, key):
+    """Acceptance: all four learner kinds (plus the transfer baseline)
+    serve through the same adapt_batch/predict_batch contract."""
+    lr = _learner(kind)
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=2,
+                              query_chunk=4, support_buckets=(16,))
+    reqs = _requests(_tasks(3))
+    eng.run_to_completion(reqs)
+    assert all(r.done for r in reqs)
+    assert all(r.all_logits().shape == (6, WAY) for r in reqs)
+    s = eng.stats()
+    assert s["tasks_adapted"] == 3 and s["queries_served"] == 18
+
+
+def test_engine_state_cache_hit_skips_adaptation(key):
+    lr = _learner("protonets")
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=2,
+                              query_chunk=4, support_buckets=(16,))
+    first = _requests(_tasks(2))
+    eng.run_to_completion(first)
+    assert eng.stats()["tasks_adapted"] == 2
+
+    # repeat visitor: same uid, NO support set — served from the cache,
+    # bit-identical logits, no new adaptation
+    rep = EpisodicRequest(uid=0, query_x=np.asarray(first[0].query_x),
+                          way=WAY)
+    eng.run_to_completion([rep])
+    assert rep.done and rep.cache_hit
+    assert eng.stats()["tasks_adapted"] == 2
+    np.testing.assert_array_equal(rep.all_logits(), first[0].all_logits())
+
+    # unknown uid without support is an explicit error, not a hang
+    with pytest.raises(ValueError, match="no cached task state"):
+        eng.add_request(EpisodicRequest(uid=99, query_x=np.zeros((2, 8, 8, 3)),
+                                        way=WAY))
+
+
+def test_engine_defers_supportless_repeat_in_same_wave(key):
+    """A support-less repeat co-scheduled with its user's FIRST visit must
+    be deferred until the state lands — not rejected — so a single
+    run_to_completion batch may mix first visits and repeats freely."""
+    lr = _learner("protonets")
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=4,
+                              query_chunk=4, support_buckets=(16,))
+    first = _requests(_tasks(1))[0]
+    repeat = EpisodicRequest(uid=first.uid,
+                             query_x=np.asarray(first.query_x), way=WAY)
+    eng.run_to_completion([first, repeat])
+    assert first.done and repeat.done
+    assert repeat.cache_hit
+    assert eng.stats()["tasks_adapted"] == 1
+    np.testing.assert_array_equal(repeat.all_logits(), first.all_logits())
+
+
+def test_engine_coscheduling_is_bitexact(key):
+    """Serving a task alone vs co-scheduled with strangers must give
+    bit-identical logits: every dispatch is padded to the same n_slots
+    lanes, and a task's support pad cap comes from its OWN size (one
+    adapt dispatch per bucket group), so only lane occupancy differs.
+    The tasks here are ragged across TWO planned buckets — the case where
+    a shared pad cap would leak co-tenant sizes into fomaml/simple_cnaps
+    states."""
+    for kind in ("protonets", "simple_cnaps", "fomaml"):
+        lr = _learner(kind)
+        params = lr.init(key)
+        tasks = [_tasks(1, shot=s, seed=400 + 7 * s)[0] for s in (2, 3, 5)]
+
+        eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=3,
+                                  query_chunk=4, support_buckets=(8, 16))
+        together = _requests(tasks)
+        eng.run_to_completion(together)
+
+        for i, t in enumerate(tasks):
+            solo_eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE,
+                                           n_slots=3, query_chunk=4,
+                                           support_buckets=(8, 16))
+            solo = _requests([t], uids=[i])
+            solo_eng.run_to_completion(solo)
+            np.testing.assert_array_equal(solo[0].all_logits(),
+                                          together[i].all_logits(),
+                                          err_msg=f"{kind} task {i}")
+
+
+def test_engine_compile_counter_flat_on_ragged_stream(key):
+    """A ragged support-size stream against planned buckets: after every
+    bucket is warm the compile counters must not move (acceptance: flat
+    compile counter, bucketed shapes only)."""
+    lr = _learner("protonets")
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=2,
+                              query_chunk=4, support_buckets=(8, 16))
+    shots = [2, 4, 3, 5, 2, 4, 5, 3]
+    counts = []
+    for i, shot in enumerate(shots):
+        reqs = _requests(_tasks(1, shot=shot, seed=300 + 10 * i),
+                         uids=[1000 + i])
+        eng.run_to_completion(reqs)
+        s = eng.stats()
+        counts.append((s["adapt_compiles"], s["predict_compiles"]))
+    # two support buckets, one fixed (n_slots, chunk) predict shape
+    assert counts[-1][0] <= 2 and counts[-1][1] == 1
+    assert counts[3:] == [counts[3]] * (len(counts) - 3), counts
+
+
+def test_engine_ragged_query_streams(key):
+    """Query counts that don't divide the chunk, including an empty
+    stream, all complete with correctly shaped logits."""
+    lr = _learner("protonets")
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=2,
+                              query_chunk=4, support_buckets=(16,))
+    base = _tasks(3)
+    reqs = _requests(base)
+    for r, m in zip(reqs, (1, 6, 0)):
+        r.query_x = np.asarray(r.query_x)[:m]
+    eng.run_to_completion(reqs)
+    assert all(r.done for r in reqs)
+    assert [r.all_logits().shape[0] for r in reqs] == [1, 6, 0]
+    assert eng.stats()["queries_served"] == 7
+
+
+# ---------------------------------------------------------------------------
+# tier-1 perf smoke
+# ---------------------------------------------------------------------------
+
+
+def test_perf_smoke_batched_predict_beats_per_task_loop(key):
+    """One micro-batched predict_batch dispatch must beat T per-task
+    predict dispatches on the same workload (the dispatch amortization the
+    serving engine is built on).  Up to 3 attempts guard against scheduler
+    noise on the shared 2-core CPU."""
+    lr = _learner("protonets")
+    params = lr.init(key)
+    t_count = 8
+    tasks = _tasks(t_count, shot=2, q=4)
+    batch = collate_task_batch(tasks)
+    keys = jax.vmap(lambda i: task_key(key, i))(jnp.arange(t_count))
+    states = lr.adapt_batch(params, batch, keys, SERVE_LITE)
+    per_states = [index_task_state(states, i) for i in range(t_count)]
+    stacked = stack_task_states(per_states)
+
+    pred_one = jax.jit(lr.predict)
+    pred_b = jax.jit(lr.predict_batch)
+
+    def run_loop():
+        jax.block_until_ready([pred_one(params, per_states[i],
+                                        batch.query_x[i])
+                               for i in range(t_count)])
+
+    def run_batched():
+        jax.block_until_ready(pred_b(params, stacked, batch.query_x))
+
+    run_loop(), run_batched()                    # compile both
+    ratios = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(5):
+            run_loop()
+        t_loop = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(5):
+            run_batched()
+        t_batch = time.perf_counter() - t0
+        ratios.append(t_loop / t_batch)
+        if ratios[-1] > 1.0:
+            break
+    assert max(ratios) > 1.0, \
+        f"batched predict never beat the per-task loop: {ratios}"
