@@ -1,6 +1,10 @@
 """Kernel micro-benchmarks: Pallas (interpret on CPU / Mosaic on TPU) vs
 the jnp reference path, plus FLOP counts so TPU runs can report achieved
-intensity.  On this CPU container the numbers check plumbing, not perf.
+intensity.  On this CPU container most numbers check plumbing, not perf —
+EXCEPT the episodic class-statistics rows: ``naive_us`` vs ``ref_us``
+there is a real CPU-XLA comparison of the materializing outer-product
+composite against the fused reassociated contraction
+(repro.kernels.dispatch), the measured win behind the dispatch refactor.
 """
 from __future__ import annotations
 
@@ -8,7 +12,56 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
+
+
+def _episodic_rows(key) -> list:
+    """Episodic-shape class-statistics + Mahalanobis-head rows: the naive
+    (B, F, F)-materializing composite vs the fused ref contraction vs the
+    Pallas kernel (interpret here; Mosaic on TPU)."""
+    rows = []
+    c = 10
+    for n in (256, 1000):
+        for f in (64, 256):
+            x = jax.random.normal(key, (n, f), jnp.float32)
+            y = jax.random.randint(jax.random.fold_in(key, 7), (n,), 0, c)
+            oh = jax.nn.one_hot(y, c, dtype=jnp.float32)
+
+            def stats(backend):
+                @jax.jit
+                def fn(x, oh):
+                    return dict(
+                        feat=dispatch.segment_sum(x, oh, backend=backend),
+                        outer=dispatch.class_second_moment(
+                            x, oh, backend=backend))
+                return fn
+
+            rows.append(dict(
+                kernel="class_stats", shape=f"{n}x{f}x{c}",
+                flops=2 * n * c * f * f,
+                naive_us=f"{time_call(stats('naive'), x, oh):.0f}",
+                ref_us=f"{time_call(stats('ref'), x, oh):.0f}",
+                pallas_us=f"{time_call(stats('pallas'), x, oh):.0f}"))
+
+    b, f = 512, 64
+    q = jax.random.normal(key, (b, f))
+    mu = jax.random.normal(jax.random.fold_in(key, 8), (c, f))
+    a = jax.random.normal(jax.random.fold_in(key, 9), (c, f, f))
+    sigma = jnp.einsum("cij,ckj->cik", a, a) + 1.0 * jnp.eye(f)
+    chol = jax.vmap(jnp.linalg.cholesky)(sigma)
+
+    def head(backend):
+        return jax.jit(lambda q, mu, chol: dispatch.mahalanobis_head(
+            q, mu, chol, backend=backend))
+
+    # naive == ref for this op (the cho_solve composite has no
+    # intermediate to fuse away), so there is no separate naive column
+    rows.append(dict(
+        kernel="mahalanobis_head", shape=f"{b}x{f}x{c}",
+        flops=2 * b * c * f * f, naive_us="",
+        ref_us=f"{time_call(head('ref'), q, mu, chol):.0f}",
+        pallas_us=f"{time_call(head('pallas'), q, mu, chol):.0f}"))
+    return rows
 
 
 def run() -> list:
@@ -21,7 +74,7 @@ def run() -> list:
     v = jax.random.normal(jax.random.fold_in(key, 2), (4, s, d), jnp.float32)
     ref_fa = jax.jit(lambda a, b, c: ref.attention_ref(a, b, c, causal=True))
     rows.append(dict(kernel="flash_attention", shape=f"4x{s}x{d}",
-                     flops=4 * 2 * 2 * s * s * d,
+                     flops=4 * 2 * 2 * s * s * d, naive_us="",
                      ref_us=f"{time_call(ref_fa, q, k, v):.0f}",
                      pallas_us=f"{time_call(lambda a, b, c: ops.flash_attention(a, b, c), q, k, v):.0f}"))
 
@@ -31,7 +84,7 @@ def run() -> list:
     a = jax.random.normal(jax.random.fold_in(key, 4), (c, f, f))
     sinv = jnp.einsum("cij,ckj->cik", a, a) + 0.1 * jnp.eye(f)
     rows.append(dict(kernel="mahalanobis", shape=f"{b}x{f}x{c}",
-                     flops=2 * b * c * f * f,
+                     flops=2 * b * c * f * f, naive_us="",
                      ref_us=f"{time_call(jax.jit(ref.mahalanobis_ref), qq, mu, sinv):.0f}",
                      pallas_us=f"{time_call(ops.mahalanobis, qq, mu, sinv):.0f}"))
 
@@ -39,16 +92,18 @@ def run() -> list:
     y = jax.random.randint(jax.random.fold_in(key, 5), (1024,), 0, 16)
     ref_sp = jax.jit(lambda a, b: ref.segment_pool_ref(a, b, 16))
     rows.append(dict(kernel="segment_pool", shape="1024x128x16",
-                     flops=2 * 1024 * 128 * 16,
+                     flops=2 * 1024 * 128 * 16, naive_us="",
                      ref_us=f"{time_call(ref_sp, x, y):.0f}",
                      pallas_us=f"{time_call(lambda a, b: ops.segment_pool(a, b, 16), x, y):.0f}"))
 
     xx = jax.random.normal(key, (8, 128, 256), jnp.float32)
     ww = jax.random.normal(jax.random.fold_in(key, 6), (8, 256, 128), jnp.float32)
     rows.append(dict(kernel="gmm", shape="8x128x256x128",
-                     flops=2 * 8 * 128 * 256 * 128,
+                     flops=2 * 8 * 128 * 256 * 128, naive_us="",
                      ref_us=f"{time_call(jax.jit(ref.gmm_ref), xx, ww):.0f}",
                      pallas_us=f"{time_call(ops.gmm, xx, ww):.0f}"))
+
+    rows.extend(_episodic_rows(key))
     return rows
 
 

@@ -18,6 +18,18 @@ Two memory columns per row:
     is the quantity LiteSpec.compute_dtype halves by construction, and
     the one that bounds live activations wherever the backend honors the
     dtype.
+
+Plus the Simple CNAPs COVARIANCE-path columns (the kernel-dispatch win):
+``cov_live_bytes_naive`` vs ``cov_live_bytes_fused`` account every
+intermediate of the class-statistics reduction (per-class feature sums +
+raw second moments) over one reduction batch — the complement chunk for
+LITE rows, all N for exact rows.  The naive composite materializes the
+per-example ``(B, F, F)`` outer tensor and its ``(B, C, F, F)``
+class-expanded form; the fused dispatch path (the default since the
+kernel-dispatch refactor) hops through ``(B, C, F)`` instead.  The
+trailing ``cov_path_N*`` rows account the same reduction at serve/exact
+batch sizes N in {256, 1000}, where the elimination is the difference
+between O(N F^2 way) live bytes and O(N F way + F^2 way).
 """
 from __future__ import annotations
 
@@ -29,6 +41,7 @@ from repro.core.lite import LiteSpec
 from repro.core.meta_learners import MetaLearnerConfig, make_learner
 from repro.core.set_encoder import SetEncoderConfig
 from repro.data.episodic import EpisodicImageConfig, sample_image_task
+from repro.kernels import dispatch
 from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
 
 H_VALUES = (4, 16, 64, 100)     # 100 == N -> exact
@@ -64,6 +77,35 @@ def run() -> list:
         return int(sum(v.aval.size * v.aval.dtype.itemsize
                        for eqn in jaxpr.eqns for v in eqn.outvars))
 
+    fdim = 64
+    way = tcfg.way
+
+    def cov_live_bytes(backend, b, dt=None) -> int:
+        """Bytes of every intermediate in the Simple CNAPs class-statistics
+        reduction over a batch of ``b`` features — the covariance path the
+        kernel dispatch fuses.  ``naive`` materializes (b, F, F) outers
+        and their (b, C, F, F) class expansion; ``ref`` hops through
+        (b, C, F)."""
+        cd = jnp.dtype(dt) if dt else jnp.float32
+        feat = jnp.zeros((b, fdim), cd)
+        oh = jnp.zeros((b, way), cd)
+
+        def stats(f, o):
+            return dict(
+                feat=dispatch.segment_sum(f, o, accum_dtype=jnp.float32,
+                                          backend=backend),
+                outer=dispatch.class_second_moment(
+                    f, o, accum_dtype=jnp.float32, backend=backend))
+
+        jaxpr = jax.make_jaxpr(stats)(feat, oh)
+        # convert_element_type outvars are excluded: XLA fuses the
+        # cast into its consumer (the fp32-accumulating reduce), so no
+        # such buffer is ever live — counting it would double-charge
+        # the bf16 rows for a full-width copy of the naive outer tensor
+        return int(sum(v.aval.size * v.aval.dtype.itemsize
+                       for eqn in jaxpr.eqns for v in eqn.outvars
+                       if eqn.primitive.name != "convert_element_type"))
+
     rows = []
     for h in H_VALUES:
         dtypes = (None,) if h >= N else (None, "bfloat16")
@@ -77,14 +119,27 @@ def run() -> list:
             lowered = jax.jit(jax.grad(loss)).lower(params, task,
                                                     jax.random.key(2))
             mem = lowered.compile().memory_analysis()
-            rows.append(dict(
+            stats_b = N if h >= N else CHUNK   # reduction batch: all-N
+            rows.append(dict(                  # exact vs one chunk
                 h=h, mode=("exact" if h >= N else f"lite_chunk{CHUNK}"),
                 complement_dtype=(dt or "float32"),
                 peak_temp_bytes=int(mem.temp_size_in_bytes),
                 chunk_live_bytes_model=(0 if h >= N
                                         else chunk_live_bytes(dt)),
+                cov_live_bytes_naive=cov_live_bytes("naive", stats_b, dt),
+                cov_live_bytes_fused=cov_live_bytes("ref", stats_b, dt),
                 argument_bytes=int(mem.argument_size_in_bytes),
             ))
+    # serve/exact-scale covariance-path accounting: the (B, F, F)
+    # elimination at the N the paper fights for (1000-image supports)
+    for n in (256, 1000):
+        rows.append(dict(
+            h=0, mode=f"cov_path_N{n}", complement_dtype="float32",
+            peak_temp_bytes=0, chunk_live_bytes_model=0,
+            cov_live_bytes_naive=cov_live_bytes("naive", n),
+            cov_live_bytes_fused=cov_live_bytes("ref", n),
+            argument_bytes=0,
+        ))
     return rows
 
 

@@ -150,6 +150,14 @@ class MetaTrainConfig:
     prefetch: background host->device batch lookahead depth for the train
       loop (0 = synchronous); donate: donate params/opt-state buffers to
       the jitted step so they update in place.
+    kernel_backend: repro.kernels.dispatch backend for the episodic
+      aggregation kernels (class segment sums, Simple CNAPs second
+      moments, Mahalanobis head): 'ref' (default; fused jnp — the second
+      moment is contracted without the per-example (B, F, F) outer
+      tensor), 'pallas' (Pallas kernels; interpret off-TPU), 'auto'
+      (pallas on TPU else ref), or 'naive' (the materializing legacy
+      composite, bit-exact with the pre-dispatch code).  The episodic
+      train-step adapter binds it at trace time.
     """
 
     tasks_per_step: int = 8
@@ -164,6 +172,7 @@ class MetaTrainConfig:
     total_steps: int = 0
     prefetch: int = 2
     donate: bool = True
+    kernel_backend: str = "ref"
 
 
 # -- step shapes (assigned input-shape set for LM-family archs) -------------

@@ -34,17 +34,28 @@ optimization rather than a notational one.
 All public entry points operate on arbitrary pytrees of encodings so they can
 aggregate anything a meta-learner pools: deep-set embeddings, backbone
 features, per-class segment sums, inner-loop gradients (MAML, Eq. 3).
+
+Every estimator is generic over a *reduction*: the default collapses the
+example axis by weight-and-sum (the historical composite, bit-for-bit),
+while the class-statistics entry points (:func:`lite_segment_sum`,
+:func:`lite_class_stats` and their serve twins) run their chunk bodies
+through :mod:`repro.kernels.dispatch`, so per-class sums and Simple
+CNAPs second moments are kernel-fused on the ``ref``/``pallas`` backends
+— the per-example ``(B, F, F)`` outer-product tensor the covariance path
+used to materialize is gone from the H pass, the no-grad complement
+chunks, and the exact path alike.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.common.tree import tree_cast, tree_stop_gradient
+from repro.kernels import dispatch
 
 PyTree = Any
 EncodeFn = Callable[[PyTree, PyTree], PyTree]  # (params, batched_inputs) -> per-example encodings
@@ -153,28 +164,33 @@ def straight_through(full_value: PyTree, grad_value: PyTree, scale) -> PyTree:
     return jax.tree.map(_one, full_value, grad_value)
 
 
-def _chunked_nograd_sum(encode_fn: EncodeFn, frozen_params: PyTree, xs: PyTree,
-                        chunk_size: int | None,
-                        accum_dtype: jnp.dtype | None = None) -> PyTree:
-    """Sum of per-example encodings over xs, computed under stop-gradient'ed
-    parameters, in sequential chunks via ``lax.map`` (so only one chunk's
-    activations are ever live).  ``accum_dtype`` upcasts each chunk's sum
-    (and the cross-chunk sum) — the fp32 accumulator the mixed-precision
-    complement pass relies on."""
+def _chunked_nograd_reduce(reduce_fn: Callable, frozen_params: PyTree,
+                           xs: PyTree, w: jnp.ndarray,
+                           chunk_size: int | None,
+                           accum_dtype: jnp.dtype | None = None) -> PyTree:
+    """Weighted reduction of per-example encodings over xs, computed under
+    stop-gradient'ed parameters, in sequential chunks via ``lax.map`` (so
+    only one chunk's activations are ever live).
+
+    ``reduce_fn(params, (xs_chunk, w_chunk), accum_dtype)`` collapses one
+    chunk's leading example axis (default: weight rows and sum — see
+    :func:`_weighted_reduce`; the segment-statistics sites pass a
+    :mod:`repro.kernels.dispatch` reduction instead, which is what keeps
+    fused class stats chunk-bounded too).  The chunk-pad tail folds into
+    ``w`` as zero weights — 0/1 weight algebra keeps that bit-exact with
+    masking the encodings after the fact.  ``accum_dtype`` upcasts each
+    chunk's reduction (and the cross-chunk sum) — the fp32 accumulator
+    the mixed-precision complement pass relies on."""
     leaves = jax.tree.leaves(xs)
     n = leaves[0].shape[0]
     if n == 0:
         raise ValueError("empty complement — use exact mode instead")
     xs = tree_stop_gradient(xs)
 
-    def _sum0(e):
-        return jnp.sum(e, axis=0, dtype=accum_dtype)
-
     if chunk_size is None or chunk_size >= n:
-        enc = encode_fn(frozen_params, xs)
-        return jax.tree.map(_sum0, enc)
+        return reduce_fn(frozen_params, (xs, w), accum_dtype)
 
-    # Pad to a multiple of chunk_size; padded tail is masked out of the sum.
+    # Pad to a multiple of chunk_size; the padded tail carries zero weight.
     num_chunks = -(-n // chunk_size)
     pad = num_chunks * chunk_size - n
 
@@ -182,24 +198,17 @@ def _chunked_nograd_sum(encode_fn: EncodeFn, frozen_params: PyTree, xs: PyTree,
         cfg = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
         return jnp.pad(a, cfg)
 
-    xs_p = jax.tree.map(_pad, xs)
-    mask = (jnp.arange(num_chunks * chunk_size) < n).astype(jnp.float32)
-    mask = mask.reshape(num_chunks, chunk_size)
-
     def _reshape(a):
         return a.reshape((num_chunks, chunk_size) + a.shape[1:])
 
-    xs_c = jax.tree.map(_reshape, xs_p)
+    xs_c = jax.tree.map(lambda a: _reshape(_pad(a)), xs)
+    w_c = _reshape(_pad(w))
 
     def _one_chunk(args):
-        chunk, m = args
-        enc = encode_fn(frozen_params, chunk)
-        return jax.tree.map(
-            lambda e: _sum0(e * m.reshape((-1,) + (1,) * (e.ndim - 1)).astype(e.dtype)),
-            enc,
-        )
+        chunk, wc = args
+        return reduce_fn(frozen_params, (chunk, wc), accum_dtype)
 
-    partials = jax.lax.map(_one_chunk, (xs_c, mask))
+    partials = jax.lax.map(_one_chunk, (xs_c, w_c))
     return jax.tree.map(lambda p: jnp.sum(p, axis=0), partials)
 
 
@@ -214,6 +223,21 @@ def _masked_encode(encode_fn: EncodeFn) -> EncodeFn:
             e)
 
     return enc
+
+
+def _weighted_reduce(encode_fn: EncodeFn) -> Callable:
+    """Default estimator reduction: encode per-example, zero-weight masked
+    rows, sum the leading axis — the same composite the estimators always
+    ran, bit-for-bit.  Signature: ``reduce(params, (xs, w), accum_dtype)``
+    with ``w`` the (N,) 0/1 validity weights."""
+    enc_w = _masked_encode(encode_fn)
+
+    def reduce_fn(params, xm, accum_dtype=None):
+        enc = enc_w(params, xm)
+        return jax.tree.map(
+            lambda e: jnp.sum(e, axis=0, dtype=accum_dtype), enc)
+
+    return reduce_fn
 
 
 def _ones_mask_like(xs: PyTree) -> jnp.ndarray:
@@ -233,7 +257,8 @@ def _masked_scale(mask: jnp.ndarray, h: int) -> jnp.ndarray:
 
 
 def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
-             spec: LiteSpec, mask: jnp.ndarray | None = None) -> PyTree:
+             spec: LiteSpec, mask: jnp.ndarray | None = None,
+             reduce_fn: Callable | None = None) -> PyTree:
     """LITE estimator of ``sum_n encode_fn(params, x_n)`` (paper Eq. 8).
 
     Forward value: exact sum over all N examples.
@@ -241,7 +266,8 @@ def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
 
     Args:
       encode_fn: maps (params, batched inputs) -> per-example encodings
-        (any pytree whose leaves have a leading example axis).
+        (any pytree whose leaves have a leading example axis).  May be
+        ``None`` when ``reduce_fn`` is given.
       params: differentiable parameters.
       xs: pytree of support inputs, leading axis N on every leaf.
       key: PRNG key for the H subset draw.
@@ -253,6 +279,13 @@ def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
         rescale uses the REAL count, so a padded task batch reproduces the
         unpadded task's estimator exactly.  ``None`` is exactly equivalent
         to an all-ones mask.
+      reduce_fn: optional fused reduction replacing the default
+        encode-weight-sum composite; ``reduce_fn(params, (xs_rows,
+        w_rows), accum_dtype)`` must collapse the leading example axis of
+        a row subset.  This is the hook the class-statistics sites use to
+        run their chunk bodies through :mod:`repro.kernels.dispatch`
+        (H pass, complement chunks, and exact path all go through it, so
+        the estimator algebra is unchanged).
 
     Returns:
       Pytree of summed encodings (leading axis reduced).
@@ -261,20 +294,20 @@ def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
     h = spec.resolved_h(n)
     if mask is None:
         mask = _ones_mask_like(xs)
-    enc_w = _masked_encode(encode_fn)
+    if reduce_fn is None:
+        reduce_fn = _weighted_reduce(encode_fn)
     if spec.exact or h >= n:
-        enc = enc_w(params, (xs, mask))
-        return jax.tree.map(lambda e: jnp.sum(e, axis=0), enc)
+        return reduce_fn(params, (xs, mask), None)
 
     h_idx, comp_idx = sample_h_indices(key, n, h, mask)
     take = lambda a, i: jnp.take(a, i, axis=0)
-    xm_h = (jax.tree.map(partial(take, i=h_idx), xs), mask[h_idx])
-    xm_c = (jax.tree.map(partial(take, i=comp_idx), xs), mask[comp_idx])
+    xs_h = jax.tree.map(partial(take, i=h_idx), xs)
+    xs_c = jax.tree.map(partial(take, i=comp_idx), xs)
+    w_c = mask[comp_idx]
 
     # Differentiable pass over H (single batch — |H| is small by
     # construction).
-    enc_h = enc_w(params, xm_h)
-    sum_h = jax.tree.map(lambda e: jnp.sum(e, axis=0), enc_h)
+    sum_h = reduce_fn(params, (xs_h, mask[h_idx]), None)
 
     # No-grad pass over the complement, chunked; optionally in low
     # precision (the dominant FLOPs at large N) with fp32 accumulation.
@@ -283,10 +316,10 @@ def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
     if spec.compute_dtype is not None:
         cd = jnp.dtype(spec.compute_dtype)
         frozen = tree_cast(frozen, cd)
-        xm_c = (tree_cast(xm_c[0], cd), xm_c[1])
+        xs_c = tree_cast(xs_c, cd)
         accum = jnp.float32
-    sum_c = _chunked_nograd_sum(enc_w, frozen, xm_c, spec.chunk_size,
-                                accum_dtype=accum)
+    sum_c = _chunked_nograd_reduce(reduce_fn, frozen, xs_c, w_c,
+                                   spec.chunk_size, accum_dtype=accum)
 
     full = jax.tree.map(lambda a, b: jax.lax.stop_gradient(a + b.astype(a.dtype)),
                         sum_h, sum_c)
@@ -294,7 +327,8 @@ def lite_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
 
 
 def serve_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
-              spec: LiteSpec, mask: jnp.ndarray | None = None) -> PyTree:
+              spec: LiteSpec, mask: jnp.ndarray | None = None,
+              reduce_fn: Callable | None = None) -> PyTree:
     """Serve-time twin of :func:`lite_sum`: the EXACT masked sum, computed
     the way LITE computes its complement — forward-only under
     ``stop_gradient``, in ``spec.chunk_size``-bounded chunks, optionally in
@@ -312,12 +346,14 @@ def serve_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
 
     With ``chunk_size=None`` the value is bit-identical to exact
     ``lite_sum`` (same masked encode, same single ``jnp.sum``); chunking
-    only reassociates the cross-chunk accumulation.
+    only reassociates the cross-chunk accumulation.  ``reduce_fn`` is the
+    same fused-reduction hook as :func:`lite_sum`'s.
     """
     del key  # nothing is subsampled
     if mask is None:
         mask = _ones_mask_like(xs)
-    enc_w = _masked_encode(encode_fn)
+    if reduce_fn is None:
+        reduce_fn = _weighted_reduce(encode_fn)
     frozen = tree_stop_gradient(params)
     xs = tree_stop_gradient(xs)
     accum = None
@@ -326,14 +362,25 @@ def serve_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree, key: jax.Array,
         frozen = tree_cast(frozen, cd)
         xs = tree_cast(xs, cd)
         accum = jnp.float32
-    return _chunked_nograd_sum(enc_w, frozen, (xs, mask), spec.chunk_size,
-                               accum_dtype=accum)
+    return _chunked_nograd_reduce(reduce_fn, frozen, xs, mask,
+                                  spec.chunk_size, accum_dtype=accum)
+
+
+def _masked_onehot(ys: jnp.ndarray, num_classes: int,
+                   mask: jnp.ndarray | None) -> jnp.ndarray:
+    onehot_all = jax.nn.one_hot(ys, num_classes, dtype=jnp.float32)  # (N, C)
+    if mask is not None:
+        # padded labels are -1 (already a zero one-hot row); the explicit
+        # product keeps counts exact even if a collator pads with 0..way-1
+        onehot_all = onehot_all * mask[:, None]
+    return onehot_all
 
 
 def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
                      ys: jnp.ndarray, num_classes: int, key: jax.Array,
                      spec: LiteSpec, mask: jnp.ndarray | None = None,
-                     sum_fn: Callable | None = None
+                     sum_fn: Callable | None = None,
+                     backend: str | None = None
                      ) -> Tuple[PyTree, jnp.ndarray]:
     """LITE estimator of per-class sums  S_c = sum_n 1(y_n = c) e(x_n).
 
@@ -342,6 +389,13 @@ def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
     global N/H rescale keeps every class-sum unbiased because the H draw is
     uniform over ALL support indices:  E[sum_{h} 1(y=c) de] = (H/N) * S'_c.
 
+    The chunk bodies (H pass, no-grad complement chunks, exact path) run
+    through :func:`repro.kernels.dispatch.segment_sum` — ``backend``
+    selects the implementation (None = the ambient dispatch default; the
+    ``ref``/``naive`` backends reproduce the pre-dispatch expand+reduce
+    composite bit-for-bit, ``pallas`` runs the one-hot MXU matmul kernel
+    under a ``custom_vjp``).
+
     ``sum_fn`` swaps the underlying set-sum estimator (default
     :func:`lite_sum`); :func:`serve_segment_sum` passes :func:`serve_sum`
     for the forward-only serve path.
@@ -349,40 +403,87 @@ def lite_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
     Returns (class_sums pytree with leading axis C, counts[C] float32).
     Counts are exact (labels are not subsampled).
     """
-    n = jax.tree.leaves(xs)[0].shape[0]
-    onehot_all = jax.nn.one_hot(ys, num_classes, dtype=jnp.float32)  # (N, C)
-    if mask is not None:
-        # padded labels are -1 (already a zero one-hot row); the explicit
-        # product keeps counts exact even if a collator pads with 0..way-1
-        onehot_all = onehot_all * mask[:, None]
+    onehot_all = _masked_onehot(ys, num_classes, mask)
     counts = jnp.sum(onehot_all, axis=0)  # exact
 
-    def seg_encode(p, batch):
-        inputs, onehot = batch
+    def seg_reduce(p, xm, accum_dtype=None):
+        (inputs, onehot), w = xm
+        # the 0/1 row weights (validity + chunk-pad tail) fold into the
+        # one-hot — exact in ANY float dtype, so a low-precision
+        # complement pass stays low-precision (fp32 class sums come from
+        # the accum_dtype accumulation)
+        oh = onehot * w.astype(onehot.dtype)[:, None]
         enc = encode_fn(p, inputs)  # leaves (B, ...)
-        # onehot entries are 0/1, so the product is exact in ANY float
-        # dtype; keeping e's dtype lets a low-precision complement pass
-        # stay low-precision (fp32 class sums come from the estimator's
-        # fp32 accumulation).
         return jax.tree.map(
-            lambda e: jnp.einsum("b...,bc->bc...", e,
-                                 onehot.astype(e.dtype)), enc
-        )
+            lambda e: dispatch.segment_sum(e, oh, accum_dtype=accum_dtype,
+                                           backend=backend), enc)
 
-    sums = (sum_fn or lite_sum)(seg_encode, params, (xs, onehot_all), key,
-                                spec, mask=mask)
+    sums = (sum_fn or lite_sum)(None, params, (xs, onehot_all), key,
+                                spec, mask=mask, reduce_fn=seg_reduce)
     return sums, counts
 
 
 def serve_segment_sum(encode_fn: EncodeFn, params: PyTree, xs: PyTree,
                       ys: jnp.ndarray, num_classes: int, key: jax.Array,
-                      spec: LiteSpec, mask: jnp.ndarray | None = None
+                      spec: LiteSpec, mask: jnp.ndarray | None = None,
+                      backend: str | None = None
                       ) -> Tuple[PyTree, jnp.ndarray]:
     """Serve-time twin of :func:`lite_segment_sum`: exact per-class sums via
     :func:`serve_sum` — forward-only, chunked, optional low-precision
     compute with fp32 accumulation.  See ``serve_sum`` for the contract."""
     return lite_segment_sum(encode_fn, params, xs, ys, num_classes, key,
-                            spec, mask=mask, sum_fn=serve_sum)
+                            spec, mask=mask, sum_fn=serve_sum,
+                            backend=backend)
+
+
+def lite_class_stats(features_fn: Callable, params: PyTree, xs: PyTree,
+                     ys: jnp.ndarray, num_classes: int, key: jax.Array,
+                     spec: LiteSpec, mask: jnp.ndarray | None = None,
+                     second_moment: bool = False,
+                     sum_fn: Callable | None = None,
+                     backend: str | None = None
+                     ) -> Tuple[Dict[str, jnp.ndarray], jnp.ndarray]:
+    """Fused per-class feature statistics under the LITE estimator.
+
+    ``features_fn(params, inputs) -> (B, F)`` is a single feature matrix
+    (NOT a pytree).  Returns ``(stats, counts)`` with ``stats["feat"]``
+    the per-class feature sums (C, F) and — when ``second_moment`` —
+    ``stats["outer"]`` the per-class raw second moments
+    ``sum_n 1(y_n = c) f_n f_n^T`` (C, F, F).
+
+    The point of this entry over :func:`lite_segment_sum` with an
+    outer-product encode: the chunk bodies go through
+    :func:`repro.kernels.dispatch.class_second_moment`, so on the ``ref``
+    and ``pallas`` backends the per-example ``(B, F, F)`` outer tensor is
+    NEVER materialized — not in the H pass, not in the no-grad complement
+    chunks, not on the exact path.  Live bytes per chunk drop from
+    O(chunk * F^2 * way) to O(chunk * F * way + F^2 * way).  (The
+    ``naive`` backend keeps the materializing composite as the bit-exact
+    legacy oracle; fused contractions reassociate the example-axis sum,
+    so their fp32 bits differ from naive at the last ulp.)
+
+    Same estimator algebra as every LITE site: exact forward, H-subset
+    backward with the global N/H rescale, mask/padded-lane invariance,
+    ``spec.compute_dtype`` complement with fp32 accumulation.
+    """
+    onehot_all = _masked_onehot(ys, num_classes, mask)
+    counts = jnp.sum(onehot_all, axis=0)  # exact
+
+    def stats_reduce(p, xm, accum_dtype=None):
+        (inputs, onehot), w = xm
+        oh = onehot * w.astype(onehot.dtype)[:, None]
+        feat = features_fn(p, inputs)                       # (B, F)
+        out = dict(feat=dispatch.segment_sum(feat, oh,
+                                             accum_dtype=accum_dtype,
+                                             backend=backend))
+        if second_moment:
+            out["outer"] = dispatch.class_second_moment(
+                feat, oh, accum_dtype=accum_dtype, backend=backend)
+        return out
+
+    stats = (sum_fn or lite_sum)(None, params, (xs, onehot_all), key,
+                                 spec, mask=mask, reduce_fn=stats_reduce)
+    return stats, counts
 
 
 def lite_value_and_grad(loss_fn: Callable, argnums: int = 0):

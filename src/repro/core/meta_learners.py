@@ -35,6 +35,16 @@ N/H backward rescale is baked into the straight-through combinator
 (repro.core.lite), so the optimizer step needs no extra weighting —
 mathematically identical to Algorithm 1's step(phi, N/H).
 
+The class-statistics sites and the Simple CNAPs Mahalanobis head run
+through the kernel dispatch layer (repro.kernels.dispatch; backend
+naive | ref | pallas | auto selected per site at trace time): per-class
+feature sums and raw second moments are kernel-fused, so the covariance
+path never materializes the per-example (B, F, F) outer-product tensor
+— in training (H pass), LITE-chunked serving, and the batched
+adapt_batch path alike.  Only the paper's naive small-task baseline
+(estimator="subsampled") keeps the literal outer-product composite: its
+forward sees just the H subset, where naive is the point.
+
 A key LITE-correctness subtlety: anything task-adapted that feeds the
 support encoder (e.g. CNAPs' FiLM parameters) must be passed through the
 combinator's *params* argument, not captured in a closure — otherwise the
@@ -53,9 +63,11 @@ from repro.common.init import lecun_normal
 from repro.common.tree import tree_stop_gradient
 from repro.core.episodic import Task, TaskBatch
 from repro.core.film import generate_film_params, init_film_generator
-from repro.core.lite import (LiteSpec, lite_segment_sum, lite_sum,
-                             serve_segment_sum, serve_sum,
+from repro.core.lite import (LiteSpec, lite_class_stats, lite_segment_sum,
+                             lite_sum, serve_segment_sum, serve_sum,
                              subsampled_task_sum)
+from repro.kernels import dispatch
+from repro.kernels.dispatch import mahalanobis_head
 from repro.core.set_encoder import (SetEncoderConfig, encode_set,
                                     init_set_encoder)
 from repro.models.backbone import BackboneDef
@@ -243,33 +255,46 @@ def _make_cnaps_family(cfg: MetaLearnerConfig, bb: BackboneDef,
         z_sum = estimator(enc, params["enc"], sx, key, lite, mask=mask)
         return z_sum / n
 
-    def _class_stats(params, film, sx, sy, key, lite: LiteSpec,
-                     estimator=lite_segment_sum, mask=None):
-        def encode(pf, x):
-            bbp, f = pf
-            # dtype-preserving: fp32 params give fp32 feats (as before);
-            # under a LiteSpec.compute_dtype complement the bf16 feats and
-            # outer products stay bf16 (the memory win) — the estimator
-            # accumulates the class sums in fp32.
-            feat = bb.features(bbp, x, f)
-            if simple:
-                outer = jnp.einsum("bi,bj->bij", feat, feat)
-                return dict(feat=feat, outer=outer)
-            return dict(feat=feat)
+    def _features(pf, x):
+        # dtype-preserving: fp32 params give fp32 feats (as before); under
+        # a LiteSpec.compute_dtype complement the bf16 feats stay bf16
+        # (the memory win) — the estimator accumulates class stats in fp32.
+        bbp, f = pf
+        return bb.features(bbp, x, f)
 
+    def _class_stats(params, film, sx, sy, key, lite: LiteSpec,
+                     mode: str = "lite", mask=None):
+        """Per-class feature sums (+ raw second moments for Simple CNAPs)
+        through the kernel-dispatched fused estimators — the per-example
+        (B, F, F) outer-product tensor is never materialized on the
+        lite/serve paths (repro.core.lite.lite_class_stats).  The
+        ``subsampled`` mode is the paper's naive small-task baseline: its
+        forward sees only the H subset, so it keeps the literal
+        outer-product composite (h is small by construction)."""
         pf = _film_as_params(bb, params["bb"], film)
-        sums, counts = estimator(encode, pf, sx, sy, cfg.way, key, lite,
-                                 mask=mask)
-        return sums, counts
+        if mode == "subsampled":
+            def encode(p, x):
+                feat = _features(p, x)
+                if simple:
+                    outer = jnp.einsum("bi,bj->bij", feat, feat)
+                    return dict(feat=feat, outer=outer)
+                return dict(feat=feat)
+
+            return _sub_seg(encode, pf, sx, sy, cfg.way, key, lite,
+                            mask=mask)
+        sum_fn = serve_sum if mode == "serve" else lite_sum
+        return lite_class_stats(_features, pf, sx, sy, cfg.way, key, lite,
+                                mask=mask, second_moment=simple,
+                                sum_fn=sum_fn)
 
     def _configure(params, sx, sy, key, lite: LiteSpec,
-                   sum_estimator=lite_sum, seg_estimator=lite_segment_sum,
+                   sum_estimator=lite_sum, stats_mode="lite",
                    mask=None):
         """Support set -> task_state (film + head statistics)."""
         z = _task_embedding(params, sx, key, lite, sum_estimator, mask=mask)
         film = generate_film_params(params["film_gen"], z)
         sums, counts = _class_stats(params, film, sx, sy, key, lite,
-                                    seg_estimator, mask=mask)
+                                    stats_mode, mask=mask)
         k_c = jnp.maximum(counts, 1.0)
         mu = sums["feat"] / k_c[:, None]                       # (C, F)
         state = dict(film=film, mu=mu)
@@ -302,19 +327,21 @@ def _make_cnaps_family(cfg: MetaLearnerConfig, bb: BackboneDef,
         qf = bb.features(tree_stop_gradient(params["bb"]), qx,
                          state["film"]).astype(jnp.float32)
         if simple:
-            diff = qf[:, None, :] - state["mu"][None, :, :]    # (B, C, F)
-            sol = jax.vmap(
-                lambda L, d: jax.scipy.linalg.cho_solve((L, True), d.T).T,
-                in_axes=(0, 1), out_axes=1)(state["chol"], diff)
-            d2 = jnp.sum(diff * sol, axis=-1)
-            return -d2
+            # Mahalanobis head through kernel dispatch: ref = the
+            # cho_solve composite (bit-exact), pallas = the VMEM quadratic
+            # -form kernel on the explicit inverse (custom_vjp backward);
+            # serve-adapted states carry the precomputed inverse so query
+            # dispatches skip the per-call O(C F^3) solves
+            return -mahalanobis_head(qf, state["mu"], state["chol"],
+                                     sinv=state.get("sinv"))
         return qf @ state["w"].T + state["b"]
 
     def meta_loss(params, task: Task, key, lite: LiteSpec, estimator=None):
-        sum_est = _sub_sum if estimator == "subsampled" else lite_sum
-        seg_est = _sub_seg if estimator == "subsampled" else lite_segment_sum
+        sub = estimator == "subsampled"
+        sum_est = _sub_sum if sub else lite_sum
         state = _configure(params, task.support_x, task.support_y, key, lite,
-                           sum_est, seg_est, mask=task.support_mask)
+                           sum_est, "subsampled" if sub else "lite",
+                           mask=task.support_mask)
         logits = _logits(params, state, task.query_x)
         loss = _xent(logits, task.query_y, task.query_mask)
         return loss, dict(
@@ -323,9 +350,17 @@ def _make_cnaps_family(cfg: MetaLearnerConfig, bb: BackboneDef,
     def adapt_one(params, sx, sy, mask, key, lite: LiteSpec):
         # forward-only serve estimators at both aggregation sites (set
         # encoder pooling + class statistics): exact, chunked, no grad
-        return _configure(params, sx, sy, key, lite,
-                          sum_estimator=serve_sum,
-                          seg_estimator=serve_segment_sum, mask=mask)
+        state = _configure(params, sx, sy, key, lite,
+                           sum_estimator=serve_sum,
+                           stats_mode="serve", mask=mask)
+        if simple and dispatch.resolve_backend() == "pallas":
+            # pallas Mahalanobis head consumes the explicit inverse:
+            # compute it ONCE at adaptation and carry it in the task
+            # state, so every cached/repeated query dispatch skips the
+            # O(C F^3) cho_solve solves (trace-time backend binding —
+            # ref-backend states stay unchanged)
+            state["sinv"] = dispatch.chol_inverse(state["chol"])
+        return state
 
     def predict(params, task_state, qx):
         return _logits(params, task_state, qx)

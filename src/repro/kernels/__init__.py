@@ -1,12 +1,16 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-Each kernel ships three layers:
-  <name>.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
-  ops.py     jit'd public wrappers (interpret=True off-TPU)
-  ref.py     pure-jnp oracles (the allclose ground truth in tests)
+Each kernel ships four layers:
+  <name>.py    pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py       jit'd public wrappers (interpret=True off-TPU)
+  ref.py       pure-jnp oracles (the allclose ground truth in tests)
+  dispatch.py  backend policy (naive | ref | pallas | auto) + custom_vjp
+               wrappers for the episodic hot path's aggregation sites —
+               the layer train/serve code actually calls
 
 Kernels: flash_attention (causal/window/softcap online-softmax),
-mahalanobis (Simple CNAPs head), segment_pool (LITE's aggregation site as
-a one-hot MXU matmul), ssd_scan (Mamba-2 intra-chunk), gmm (per-expert
-grouped GEMM for the MoE dispatch).
+mahalanobis (Simple CNAPs head), segment_pool / class_second_moment
+(LITE's aggregation sites as one-hot MXU matmuls — weight-aware, so
+padded TaskBatch lanes drop out natively), ssd_scan (Mamba-2
+intra-chunk), gmm (per-expert grouped GEMM for the MoE dispatch).
 """

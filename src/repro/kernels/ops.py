@@ -2,10 +2,33 @@
 
 On non-TPU backends the kernels execute in interpret mode (Python
 evaluation of the kernel body — bit-faithful semantics, no Mosaic); on
-TPU the same code lowers to Mosaic.  Model code opts in via
-``use_pallas_kernels`` config; the XLA/jnp path (ref semantics) is what
-the SPMD dry-run lowers, so roofline FLOPs stay visible to the HLO
-analyzer either way.
+TPU the same code lowers to Mosaic.
+
+How kernels reach model code — two layers:
+
+* **The episodic hot path goes through ``repro.kernels.dispatch``**, not
+  this module: the class-statistics reductions (per-class feature sums,
+  Simple CNAPs second moments) and the Mahalanobis head are *dispatched*
+  ops with a per-site backend policy (``naive`` legacy composite /
+  ``ref`` fused jnp / ``pallas`` / ``auto``) selected via
+  ``MetaTrainConfig.kernel_backend``, the serving engine's
+  ``kernel_backend`` argument, or ``--kernel-backend`` on both
+  launchers.  The Pallas forwards there are wrapped in ``custom_vjp``
+  (ref-math backwards) so they are differentiable inside the LITE
+  H-pass.  Wired sites: ProtoNets prototypes, CNAPs / Simple CNAPs class
+  statistics and Mahalanobis head, through training
+  (``make_batched_meta_train_step``), LITE-chunked serving
+  (``repro.serve.episodic``), and the batched ``adapt_batch`` path.
+  Status: ref is the default and fully validated; pallas is
+  interpret-validated on CPU (parity + grad tests in
+  tests/test_dispatch.py) with real-TPU Mosaic validation pending, same
+  as the flash-attention sweeps.
+
+* **This module** keeps the raw jit'd wrappers (LM-side kernels and
+  direct use: flash_attention, gmm, ssd_chunk, plus the class-statistics
+  kernels for benchmarks/tests).  The XLA/jnp path (ref semantics) is
+  what the SPMD dry-run lowers, so roofline FLOPs stay visible to the
+  HLO analyzer either way.
 """
 from __future__ import annotations
 
@@ -20,10 +43,7 @@ from repro.kernels import gmm as _gmm
 from repro.kernels import mahalanobis as _md
 from repro.kernels import segment_pool as _sp
 from repro.kernels import ssd_scan as _ssd
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.tpu_compat import interpret_mode as _interpret
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap"))
@@ -57,6 +77,22 @@ def mahalanobis(q, mu, sinv):
 def segment_pool(x, labels, num_classes: int):
     """x: (B, F); labels: (B,) -> (sums (C, F), counts (C,))."""
     return _sp.segment_pool(x, labels, num_classes, interpret=_interpret())
+
+
+@jax.jit
+def segment_pool_weighted(x, weights):
+    """x: (B, F); weights: (B, C) mask-folded one-hot -> sums (C, F).
+    Padded/invalid rows are zero-weight rows — the TaskBatch-native form
+    the dispatch layer uses."""
+    return _sp.segment_pool_weighted(x, weights, interpret=_interpret())
+
+
+@jax.jit
+def class_second_moment(x, weights):
+    """x: (B, F); weights: (B, C) -> (C, F, F) per-class raw second
+    moments sum_b w[b,c] x_b x_b^T, computed without materializing the
+    per-example (B, F, F) outer tensor."""
+    return _sp.class_second_moment(x, weights, interpret=_interpret())
 
 
 @jax.jit

@@ -1,4 +1,5 @@
-"""Version tolerance for the Pallas TPU compiler-params dataclass.
+"""Version tolerance for the Pallas TPU compiler-params dataclass, plus
+the one shared backend-detection policy.
 
 jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; depending
 on the installed jax exactly one of the two names exists.  Kernels import
@@ -6,6 +7,14 @@ on the installed jax exactly one of the two names exists.  Kernels import
 """
 from __future__ import annotations
 
+import jax
 import jax.experimental.pallas.tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def interpret_mode() -> bool:
+    """True when Pallas kernels should run in interpret mode (any non-TPU
+    backend).  The single policy shared by ops.py's wrappers and
+    dispatch.py's backend resolution — keep them from drifting."""
+    return jax.default_backend() != "tpu"

@@ -196,6 +196,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # newer jax: list of dicts
+        cost = cost[0] if cost else {}
     analysis = hlo_parse.analyze(compiled.as_text())
     mem = _mem_analysis(compiled)
 

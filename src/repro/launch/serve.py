@@ -11,7 +11,9 @@ to adapt on + a query stream to answer; all four learner kinds serve
 through the same batched ``adapt_batch``/``predict_batch`` contract, with
 LITE-chunked forward-only adaptation, an LRU task-state cache keyed by
 task uid (``--repeat-frac`` controls how much of the traffic is repeat
-users), and micro-batched query dispatch:
+users), micro-batched query dispatch, and the aggregation kernels
+(class statistics, Mahalanobis head) routed through
+``repro.kernels.dispatch`` (``--kernel-backend``):
 
     PYTHONPATH=src python -m repro.launch.serve --episodic \
         --learner protonets --requests 16 --slots 4 --shot 10 \
@@ -80,7 +82,8 @@ def run_episodic(args) -> None:
     engine = EpisodicServeEngine(learner, params, lite=lite,
                                  n_slots=args.slots,
                                  query_chunk=args.query_chunk,
-                                 support_buckets=buckets)
+                                 support_buckets=buckets,
+                                 kernel_backend=args.kernel_backend)
     # cold wave first so every warm request finds its user's state cached
     # regardless of slot count — warm traffic measures the cache, not
     # admission-wave luck
@@ -127,6 +130,15 @@ def main() -> None:
     ap.add_argument("--lite-dtype", choices=["bfloat16", "float16"],
                     default=None,
                     help="serve-time adaptation compute dtype")
+    ap.add_argument("--kernel-backend",
+                    choices=["ref", "pallas", "auto", "naive"],
+                    default="ref",
+                    help="episodic aggregation-kernel backend "
+                         "(repro.kernels.dispatch), bound per engine at "
+                         "construction: ref = fused jnp, pallas = Pallas "
+                         "kernels (interpret off-TPU), auto = pallas on "
+                         "TPU else ref, naive = materializing legacy "
+                         "composite")
     args = ap.parse_args()
 
     if args.episodic:

@@ -17,7 +17,10 @@ engine knobs: ``--prefetch N`` (background batch lookahead; default 2),
 ``--no-donate`` (disable in-place params/opt-state updates),
 ``--data-source host`` (host-side numpy collation the prefetcher can
 overlap with device compute), ``--schedule cosine|wsd`` (per-step lr),
-and ``--lite-dtype bfloat16`` (mixed-precision no-grad complement):
+``--lite-dtype bfloat16`` (mixed-precision no-grad complement), and
+``--kernel-backend ref|pallas|auto|naive`` (the
+repro.kernels.dispatch backend for the fused class-statistics /
+Mahalanobis aggregation kernels):
 
     PYTHONPATH=src python -m repro.launch.train --episodic \
         --steps 100 --tasks-per-step 8 --dp-shards 1 \
@@ -63,13 +66,15 @@ def run_episodic(args) -> None:
                            total_steps=args.steps,
                            lite_dtype=args.lite_dtype,
                            prefetch=args.prefetch,
-                           donate=not args.no_donate)
+                           donate=not args.no_donate,
+                           kernel_backend=args.kernel_backend)
     mesh = make_dp_mesh(meta.dp_shards) if meta.dp_shards > 1 else None
     print(f"episodic meta-training: learner={args.learner} "
           f"tasks_per_step={meta.tasks_per_step} dp_shards={meta.dp_shards} "
           f"schedule={meta.schedule or 'constant'} "
           f"prefetch={meta.prefetch} donate={meta.donate} "
           f"lite_dtype={meta.lite_dtype or 'float32'} "
+          f"kernel_backend={meta.kernel_backend} "
           f"devices={len(jax.devices())}")
 
     backbone = make_conv_backbone(ConvBackboneConfig(widths=(16, 32),
@@ -165,6 +170,16 @@ def main() -> None:
                     default=None,
                     help="LITE no-grad complement compute dtype "
                          "(default fp32)")
+    ap.add_argument("--kernel-backend",
+                    choices=["ref", "pallas", "auto", "naive"],
+                    default="ref",
+                    help="episodic aggregation-kernel backend "
+                         "(repro.kernels.dispatch): ref = fused jnp "
+                         "(no (B,F,F) outer intermediate), pallas = "
+                         "Pallas kernels (interpret off-TPU), auto = "
+                         "pallas on TPU else ref, naive = materializing "
+                         "legacy composite (bit-exact pre-dispatch "
+                         "oracle)")
     args = ap.parse_args()
 
     if args.episodic:

@@ -54,6 +54,7 @@ import numpy as np
 
 from repro.core.episodic import (Task, index_task_state, stack_task_states)
 from repro.core.episodic_train import task_key
+from repro.kernels import dispatch
 from repro.core.lite import LiteSpec
 from repro.core.meta_learners import MetaLearner
 from repro.data.episodic import (bucket_for, collate_task_batch,
@@ -153,7 +154,8 @@ class EpisodicServeEngine:
                  lite: Optional[LiteSpec] = None, n_slots: int = 4,
                  query_chunk: int = 8,
                  support_buckets: Sequence[int] = (64,),
-                 cache_capacity: int = 64, seed: int = 0):
+                 cache_capacity: int = 64, seed: int = 0,
+                 kernel_backend: Optional[str] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.learner = learner
@@ -167,11 +169,25 @@ class EpisodicServeEngine:
         self.cache = TaskStateCache(cache_capacity)
         self._slots: List[Optional[_Slot]] = [None] * n_slots
         self._base_key = jax.random.key(seed)
-        self._adapt = BucketedStepCache(
-            lambda p, batch, keys: learner.adapt_batch(p, batch, keys,
-                                                       self.lite))
-        self._predict = BucketedStepCache(
-            lambda p, states, qx: learner.predict_batch(p, states, qx))
+        # The aggregation-kernel backend (repro.kernels.dispatch) is an
+        # ENGINE property, resolved once at construction (None = the
+        # ambient dispatch default) and bound at trace time inside both
+        # dispatches.  The per-shape compile cache keys on shapes alone,
+        # so flipping the ambient default on a warm engine never
+        # recompiles or changes results — a different backend is a
+        # different engine.
+        self.kernel_backend = dispatch.resolve_backend(kernel_backend)
+
+        def _adapt_fn(p, batch, keys):
+            with dispatch.use_backend(self.kernel_backend):
+                return learner.adapt_batch(p, batch, keys, self.lite)
+
+        def _predict_fn(p, states, qx):
+            with dispatch.use_backend(self.kernel_backend):
+                return learner.predict_batch(p, states, qx)
+
+        self._adapt = BucketedStepCache(_adapt_fn)
+        self._predict = BucketedStepCache(_predict_fn)
         # resident stacked states for an unchanged live cohort — slot
         # states are immutable after adaptation, so the (n_slots, ...)
         # predict-side stack is rebuilt only when a slot joins or retires

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import dispatch
 from repro.models.registry import get_api
 from repro.optim import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm
 from repro.optim.schedules import cosine_schedule
@@ -108,8 +109,12 @@ def make_episodic_train_step(learner, lite, meta_cfg,
         mesh=mesh if meta_cfg.dp_shards > 1 else None, dp_axis=dp_axis)
 
     def train_step(state: State, batch: Dict) -> Tuple[State, Dict]:
-        params, opt, metrics = inner(state["params"], state["opt"],
-                                     batch["tasks"], batch["key"])
+        # the configured kernel backend is bound HERE, at trace time:
+        # jit retraces per shape, and each trace resolves the config's
+        # backend regardless of the ambient dispatch default
+        with dispatch.use_backend(meta_cfg.kernel_backend):
+            params, opt, metrics = inner(state["params"], state["opt"],
+                                         batch["tasks"], batch["key"])
         return dict(params=params, opt=opt), metrics
 
     return train_step

@@ -316,6 +316,17 @@ def test_bucketed_cache_compile_counter_flat_on_ragged_stream(key):
     # flat tail: nothing new compiles once the buckets are warm
     assert counts[4:] == [counts[4]] * (len(counts) - 4)
 
+    # kernel-dispatch guard: the cache keys on shapes alone and the
+    # dispatch backend binds at lowering time, so flipping the ambient
+    # backend on the warm cache must not leak a single extra compile
+    from repro.kernels import dispatch
+    with dispatch.use_backend("naive"):
+        for i, shot in enumerate(shots[:4]):
+            batch = collate_with_buckets([task_for(shot, i)], s_buckets,
+                                         q_buckets)
+            step(params, opt, batch, jax.random.fold_in(key, i))
+    assert step.compile_count == counts[-1]
+
 
 # -- schedules in the batched episodic path ----------------------------------
 
