@@ -13,6 +13,7 @@ MODULES = (
     "benchmarks.memory_vs_h",          # paper §D.4 memory-vs-|H| claim
     "benchmarks.serve_throughput",     # episodic serving engine throughput
     "benchmarks.kernel_bench",         # Pallas kernels vs jnp reference
+    "benchmarks.dp_scaling",           # two-level DP engine wire bytes + rate
     "benchmarks.roofline_report",      # dry-run roofline table (§Roofline)
 )
 

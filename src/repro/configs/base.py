@@ -139,8 +139,22 @@ class MetaTrainConfig:
 
     tasks_per_step: tasks whose gradients are averaged into ONE optimizer
       step (the batch-of-episodes axis; 1 reproduces paper Algorithm 1).
-    dp_shards: data-parallel shards over the task axis (shard_map); must
-      divide tasks_per_step.  1 = single-device vmap only.
+    dp_shards: data-parallel shards over the task axis within one host's
+      ICI domain (shard_map 'data' axis); 1 = single-device vmap only.
+    dcn_shards: outer host-level shards (the 'dcn' mesh axis of
+      repro.launch.mesh.make_two_level_dp_mesh).  Each host differentiates
+      its task slice and gradients reduce across hosts over DCN —
+      'pmean' by default or error-feedback 'compressed' (grad_reduce).
+    grad_reduce: cross-DCN gradient reduction mode: 'pmean' (exact) |
+      'compressed' (int8 error-feedback compressed_psum from
+      repro.optim.compress; residual carried in opt_state['ef']).
+    accum_steps: sequential gradient-accumulation microbatches per
+      optimizer step — each shard scans accum_steps chunks of its local
+      tasks before the single cross-mesh reduction, so tasks_per_step can
+      exceed per-host memory.
+    Divisibility (tasks_per_step % (dp_shards * dcn_shards * accum_steps))
+    and mode validity are checked HERE at construction time, not at trace
+    time.
     lite_dtype: LiteSpec.compute_dtype for the no-grad complement pass
       (None = fp32; 'bfloat16' runs the dominant no-grad FLOPs in half
       precision with fp32 accumulation; gradients are unchanged).
@@ -162,6 +176,9 @@ class MetaTrainConfig:
 
     tasks_per_step: int = 8
     dp_shards: int = 1
+    dcn_shards: int = 1
+    grad_reduce: str = "pmean"       # 'pmean' | 'compressed'
+    accum_steps: int = 1
     lite_h: int = 8
     lite_chunk: Optional[int] = None
     lite_dtype: Optional[str] = None
@@ -173,6 +190,31 @@ class MetaTrainConfig:
     prefetch: int = 2
     donate: bool = True
     kernel_backend: str = "ref"
+
+    def __post_init__(self):
+        # fail at CONFIG time, not at trace time deep inside shard_map
+        if self.grad_reduce not in ("pmean", "compressed"):
+            raise ValueError(
+                f"grad_reduce={self.grad_reduce!r} (want 'pmean' or "
+                f"'compressed')")
+        if self.grad_reduce == "compressed" and self.dcn_shards < 2:
+            raise ValueError(
+                "grad_reduce='compressed' compresses CROSS-HOST traffic; "
+                f"with dcn_shards={self.dcn_shards} there is none to "
+                "compress and gradients would be quantized for a "
+                "singleton reduction — set dcn_shards >= 2 (or keep "
+                "grad_reduce='pmean')")
+        for name in ("dp_shards", "dcn_shards", "accum_steps",
+                     "tasks_per_step"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name}={getattr(self, name)} must be >= 1")
+        denom = self.dp_shards * self.dcn_shards * self.accum_steps
+        if self.tasks_per_step % denom:
+            raise ValueError(
+                f"tasks_per_step={self.tasks_per_step} must be divisible by "
+                f"dp_shards*dcn_shards*accum_steps = {self.dp_shards}*"
+                f"{self.dcn_shards}*{self.accum_steps} = {denom} (every "
+                f"shard scans accum_steps equal task chunks)")
 
 
 # -- step shapes (assigned input-shape set for LM-family archs) -------------

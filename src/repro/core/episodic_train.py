@@ -140,24 +140,77 @@ def make_batched_meta_grads(learner: MetaLearner, lite: LiteSpec) -> Callable:
     return grads_fn
 
 
+def init_ef_state(params: PyTree, dcn_shards: int) -> PyTree:
+    """Zero error-feedback residuals for ``grad_reduce='compressed'``: one
+    fp32 residual copy per DCN shard (leading axis ``dcn_shards``, sharded
+    ``P('dcn')`` across the outer mesh axis).  Lives in ``opt_state['ef']``
+    so checkpoints carry it and restarts stay exact."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((dcn_shards,) + p.shape, jnp.float32), params)
+
+
+def _accumulated_grads(grads_fn: Callable, params: PyTree, batch: TaskBatch,
+                       key, ids, accum: int):
+    """Mean loss/accuracy/grads over ``batch``, computed as ``accum``
+    sequential task chunks (lax.scan) so peak activation memory is that of
+    T/accum tasks.  Per-task keys ride on the GLOBAL ids, so the result is
+    chunking-invariant; ``accum=1`` calls ``grads_fn`` directly and is
+    bit-identical to the unaccumulated step."""
+    if accum <= 1:
+        return grads_fn(params, batch, key, ids)
+    t = batch.num_tasks
+    chunks = jax.tree.map(
+        lambda a: a.reshape((accum, t // accum) + a.shape[1:]), batch)
+    ids_c = ids.reshape(accum, t // accum)
+
+    def body(carry, xs):
+        chunk, cid = xs
+        l, a, g = grads_fn(params, chunk, key, cid)
+        cl, ca, cg = carry
+        return (cl + l, ca + a, jax.tree.map(jnp.add, cg, g)), None
+
+    zero = (jnp.zeros(()), jnp.zeros(()),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    (loss, acc, grads), _ = jax.lax.scan(body, zero, (chunks, ids_c))
+    scale = 1.0 / accum       # equal chunk sizes: mean of chunk-means
+    return loss * scale, acc * scale, jax.tree.map(lambda g: g * scale, grads)
+
+
 def make_batched_meta_train_step(learner: MetaLearner, lite: LiteSpec,
                                  adamw: AdamWConfig = AdamWConfig(weight_decay=0.0),
                                  lr: float = 1e-3,
                                  max_grad_norm: float = 10.0,
                                  schedule: Optional[Callable] = None,
-                                 mesh=None, dp_axis: str = "data") -> Callable:
+                                 mesh=None, dp_axis: str = "data",
+                                 dcn_axis: str = "dcn",
+                                 grad_reduce: str = "pmean",
+                                 accum_steps: int = 1) -> Callable:
     """Task-batched meta-training step: T tasks -> ONE AdamW step.
 
         step(params, opt_state, batch: TaskBatch, key)
             -> (params, opt_state, metrics)
 
     Without a mesh the whole batch is vmapped on the local device.  With
-    ``mesh`` (whose ``dp_axis`` has size S > 1) the task axis is sharded
-    S-ways via ``shard_map``: params/opt state replicated, each shard
-    differentiates its T/S tasks, gradients are ``pmean``-ed across the
-    axis, and every shard applies the identical optimizer update — so the
-    result is bit-comparable to the single-device batched step.
-    ``batch.num_tasks`` must be divisible by S.
+    ``mesh`` the task axis is sharded via ``shard_map``:
+
+    * 1-D mesh (``dp_axis`` only, today's single-host path): params/opt
+      state replicated, each shard differentiates its T/S tasks, gradients
+      ``pmean`` across the axis, every shard applies the identical update —
+      bit-comparable to the single-device batched step.
+    * two-level mesh (``make_two_level_dp_mesh``: outer ``dcn_axis`` x
+      inner ``dp_axis``): the task axis shards over BOTH axes
+      (``P((dcn, data))``); gradients first ``pmean`` over the fast ICI
+      ``data`` axis, then reduce across hosts over ``dcn`` — exactly
+      (``grad_reduce='pmean'``) or int8 error-feedback compressed
+      (``'compressed'``, ``repro.optim.compress.compressed_psum``; the
+      per-host residual lives in ``opt_state['ef']``, see
+      :func:`init_ef_state`).  At ``dcn`` size 1 the extra reduction is a
+      singleton all-reduce, so results are bit-identical to the 1-D path.
+
+    ``accum_steps > 1`` scans that many sequential task chunks per shard
+    before the single cross-mesh reduction (gradient accumulation), so
+    ``tasks_per_step`` can exceed per-host memory; collective count per
+    optimizer step is unchanged.
 
     ``schedule`` (step -> lr, e.g. from ``repro.optim.schedules``)
     overrides the constant ``lr``; the step index is the optimizer-state
@@ -175,43 +228,93 @@ def make_batched_meta_train_step(learner: MetaLearner, lite: LiteSpec,
                                        grad_norm=gnorm,
                                        lr=jnp.asarray(lr_t, jnp.float32))
 
-    if mesh is not None and dp_axis not in dict(mesh.shape):
-        raise ValueError(f"mesh axes {tuple(dict(mesh.shape))} lack "
+    if grad_reduce not in ("pmean", "compressed"):
+        raise ValueError(f"grad_reduce={grad_reduce!r} (want 'pmean' or "
+                         f"'compressed')")
+    sizes = {} if mesh is None else dict(mesh.shape)
+    if mesh is not None and dp_axis not in sizes:
+        raise ValueError(f"mesh axes {tuple(sizes)} lack "
                          f"dp_axis={dp_axis!r}")
-    dp = 1 if mesh is None else dict(mesh.shape)[dp_axis]
-    if dp == 1:
+    dp = sizes.get(dp_axis, 1)
+    two_level = dcn_axis in sizes
+    dcn = sizes.get(dcn_axis, 1)
+    if grad_reduce == "compressed" and not two_level:
+        raise ValueError(
+            "grad_reduce='compressed' compresses the cross-host DCN "
+            "reduction: it needs a two-level mesh "
+            "(repro.launch.mesh.make_two_level_dp_mesh) with a "
+            f"{dcn_axis!r} axis")
+    shards = dp * dcn
+    compressed = grad_reduce == "compressed"
+
+    if mesh is None:
         def step(params: PyTree, opt_state: Dict, batch: TaskBatch, key
                  ) -> Tuple[PyTree, Dict, Dict]:
-            loss, acc, grads = grads_fn(params, batch, key)
+            if batch.num_tasks % accum_steps:
+                raise ValueError(f"tasks_per_step={batch.num_tasks} not "
+                                 f"divisible by accum_steps={accum_steps}")
+            ids = jnp.arange(batch.num_tasks)
+            loss, acc, grads = _accumulated_grads(grads_fn, params, batch,
+                                                  key, ids, accum_steps)
             return apply_update(params, opt_state, loss, acc, grads)
 
         return step
 
+    from repro.optim.compress import compressed_psum
     from repro.sharding import shard_map
+
+    task_spec = P((dcn_axis, dp_axis)) if two_level else P(dp_axis)
+    in_specs = [P(), P(), task_spec, P(), task_spec]
+    out_specs = [P(), P(), P()]
+    if compressed:
+        in_specs.append(P(dcn_axis))       # opt_state['ef'], leading axis
+        out_specs.append(P(dcn_axis))
+
+    def sharded_body(params, opt_state, local_batch, key_data, local_ids,
+                     *maybe_ef):
+        key = jax.random.wrap_key_data(key_data)
+        loss, acc, grads = _accumulated_grads(grads_fn, params, local_batch,
+                                              key, local_ids, accum_steps)
+        loss = jax.lax.pmean(loss, dp_axis)
+        acc = jax.lax.pmean(acc, dp_axis)
+        grads = jax.lax.pmean(grads, dp_axis)
+        if two_level:
+            loss = jax.lax.pmean(loss, dcn_axis)
+            acc = jax.lax.pmean(acc, dcn_axis)
+            if compressed:
+                ef = jax.tree.map(lambda e: e[0], maybe_ef[0])
+                summed, new_ef = compressed_psum(grads, dcn_axis, ef)
+                grads = jax.tree.map(lambda g: g / dcn, summed)
+                new_ef = jax.tree.map(lambda e: e[None], new_ef)
+            else:
+                grads = jax.lax.pmean(grads, dcn_axis)
+        out = apply_update(params, opt_state, loss, acc, grads)
+        return out + ((new_ef,) if compressed else ())
 
     def step(params: PyTree, opt_state: Dict, batch: TaskBatch, key
              ) -> Tuple[PyTree, Dict, Dict]:
         t = batch.num_tasks
-        if t % dp:
-            raise ValueError(f"tasks_per_step={t} not divisible by "
-                             f"dp_shards={dp}")
+        if t % (shards * accum_steps):
+            raise ValueError(
+                f"tasks_per_step={t} not divisible by dp_shards*dcn_shards*"
+                f"accum_steps = {dp}*{dcn}*{accum_steps}")
         ids = jnp.arange(t)
         # raw uint32 key data crosses the shard_map boundary (extended
         # key dtypes and partitioning don't mix on all jax versions)
         key_data = jax.random.key_data(key)
-
-        @functools.partial(
-            shard_map, mesh=mesh,
-            in_specs=(P(), P(), P(dp_axis), P(), P(dp_axis)),
-            out_specs=(P(), P(), P()), check_rep=False)
-        def sharded(params, opt_state, local_batch, key_data, local_ids):
-            key = jax.random.wrap_key_data(key_data)
-            loss, acc, grads = grads_fn(params, local_batch, key, local_ids)
-            loss = jax.lax.pmean(loss, dp_axis)
-            acc = jax.lax.pmean(acc, dp_axis)
-            grads = jax.lax.pmean(grads, dp_axis)
-            return apply_update(params, opt_state, loss, acc, grads)
-
+        sharded = functools.partial(
+            shard_map, mesh=mesh, in_specs=tuple(in_specs),
+            out_specs=tuple(out_specs), check_rep=False)(sharded_body)
+        if compressed:
+            if "ef" not in opt_state:
+                raise ValueError("grad_reduce='compressed' needs "
+                                 "opt_state['ef'] — initialize it with "
+                                 "init_ef_state(params, dcn_shards)")
+            opt_in = {k: v for k, v in opt_state.items() if k != "ef"}
+            params, opt, metrics, ef = sharded(params, opt_in, batch,
+                                               key_data, ids,
+                                               opt_state["ef"])
+            return params, dict(opt, ef=ef), metrics
         return sharded(params, opt_state, batch, key_data, ids)
 
     return step

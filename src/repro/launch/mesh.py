@@ -29,6 +29,12 @@ def make_test_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+_EMULATE_HINT = (
+    "set XLA_FLAGS=--xla_force_host_platform_device_count=N before importing "
+    "jax (or run in a fresh subprocess with that env var) to emulate N "
+    "devices on CPU — the pattern tests/test_multihost.py uses")
+
+
 def make_dp_mesh(shards: int, axis: str = "data"):
     """1-D data-parallel mesh over the first ``shards`` devices (the
     task-batched meta-training engine shards the task axis over it)."""
@@ -37,5 +43,29 @@ def make_dp_mesh(shards: int, axis: str = "data"):
 
     devices = jax.devices()
     if shards > len(devices):
-        raise ValueError(f"dp_shards={shards} but only {len(devices)} devices")
+        raise ValueError(
+            f"dp_shards={shards} but only {len(devices)} device(s) are "
+            f"visible; use dp_shards <= {len(devices)}, or {_EMULATE_HINT}")
     return Mesh(np.asarray(devices[:shards]), (axis,))
+
+
+def make_two_level_dp_mesh(dcn_shards: int, dp_shards: int,
+                           dcn_axis: str = "dcn", axis: str = "data"):
+    """Two-level data-parallel mesh for the task-batched engine: an outer
+    host-level ``dcn`` axis (slow DCN links — cross-host gradient
+    reduction) times an inner ``data`` axis (fast ICI — per-host task
+    sharding).  ``jax.devices()`` orders devices process-major, so rows of
+    the (dcn, data) grid line up with hosts on a real multi-host
+    deployment; on one host (or under emulation) the split is logical but
+    exercises the identical collective structure."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devices = jax.devices()
+    need = dcn_shards * dp_shards
+    if need > len(devices):
+        raise ValueError(
+            f"dcn_shards*dp_shards = {dcn_shards}*{dp_shards} = {need} but "
+            f"only {len(devices)} device(s) are visible; {_EMULATE_HINT}")
+    grid = np.asarray(devices[:need]).reshape(dcn_shards, dp_shards)
+    return Mesh(grid, (dcn_axis, axis))

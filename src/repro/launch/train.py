@@ -12,8 +12,20 @@ straggler monitoring — is exercised end to end.
 ``--episodic`` switches to the paper's workload: task-batched LITE
 meta-training (repro.core.episodic_train) on the synthetic episodic image
 stream, with ``--tasks-per-step`` tasks per optimizer step and the task
-axis optionally sharded over ``--dp-shards`` devices.  The throughput
-engine knobs: ``--prefetch N`` (background batch lookahead; default 2),
+axis optionally sharded over ``--dp-shards`` devices within a host — and,
+beyond one host, over a two-level (dcn, data) mesh with ``--dcn-shards``
+outer host-level shards, ``--grad-reduce pmean|compressed`` cross-host
+gradient reduction (compressed = int8 error feedback, residual
+checkpointed in the optimizer state), and ``--accum-steps`` sequential
+gradient-accumulation chunks so tasks_per_step can exceed per-host
+memory:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+    PYTHONPATH=src python -m repro.launch.train --episodic --steps 20 \\
+        --tasks-per-step 8 --dp-shards 2 --dcn-shards 2 \\
+        --grad-reduce compressed --accum-steps 2
+
+The throughput engine knobs: ``--prefetch N`` (background batch lookahead; default 2),
 ``--no-donate`` (disable in-place params/opt-state updates),
 ``--data-source host`` (host-side numpy collation the prefetcher can
 overlap with device compute), ``--schedule cosine|wsd`` (per-step lr),
@@ -38,7 +50,7 @@ from repro.configs.base import SHAPES_BY_NAME, MetaTrainConfig
 from repro.configs.registry import ARCH_IDS, get_config, get_smoke_config
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig
 from repro.launch.mesh import (make_dp_mesh, make_production_mesh,
-                               make_test_mesh)
+                               make_test_mesh, make_two_level_dp_mesh)
 from repro.optim.schedules import schedule_for
 from repro.sharding import rules
 from repro.sharding.ctx import P
@@ -60,7 +72,10 @@ def run_episodic(args) -> None:
     from repro.optim import AdamWConfig
 
     meta = MetaTrainConfig(tasks_per_step=args.tasks_per_step,
-                           dp_shards=args.dp_shards, lr=args.peak_lr,
+                           dp_shards=args.dp_shards,
+                           dcn_shards=args.dcn_shards,
+                           grad_reduce=args.grad_reduce,
+                           accum_steps=args.accum_steps, lr=args.peak_lr,
                            schedule=args.schedule,
                            warmup_steps=max(args.steps // 50, 1),
                            total_steps=args.steps,
@@ -68,9 +83,16 @@ def run_episodic(args) -> None:
                            prefetch=args.prefetch,
                            donate=not args.no_donate,
                            kernel_backend=args.kernel_backend)
-    mesh = make_dp_mesh(meta.dp_shards) if meta.dp_shards > 1 else None
+    if meta.dcn_shards > 1 or meta.grad_reduce == "compressed":
+        mesh = make_two_level_dp_mesh(meta.dcn_shards, meta.dp_shards)
+    elif meta.dp_shards > 1:
+        mesh = make_dp_mesh(meta.dp_shards)
+    else:
+        mesh = None
     print(f"episodic meta-training: learner={args.learner} "
           f"tasks_per_step={meta.tasks_per_step} dp_shards={meta.dp_shards} "
+          f"dcn_shards={meta.dcn_shards} grad_reduce={meta.grad_reduce} "
+          f"accum_steps={meta.accum_steps} "
           f"schedule={meta.schedule or 'constant'} "
           f"prefetch={meta.prefetch} donate={meta.donate} "
           f"lite_dtype={meta.lite_dtype or 'float32'} "
@@ -88,10 +110,24 @@ def run_episodic(args) -> None:
                     compute_dtype=meta.lite_dtype)
     adamw = AdamWConfig(weight_decay=0.0)
 
-    init = make_episodic_init_state(learner, adamw)
+    init = make_episodic_init_state(learner, adamw, meta_cfg=meta)
     step = make_episodic_train_step(learner, lite, meta, adamw, mesh=mesh)
     state = init(jax.random.key(0))
     state_abs = jax.eval_shape(init, jax.random.key(0))
+
+    # land prefetched batches directly in the mesh layout the sharded
+    # step consumes (task axis over (dcn, data)); key stays replicated
+    batch_put = None
+    if mesh is not None:
+        task_sharding = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+        def batch_put(b):
+            # the PRNG key stays host-side (extended key dtypes and
+            # explicit shardings don't mix on all jax versions)
+            return dict(
+                tasks=jax.tree.map(
+                    lambda a: jax.device_put(a, task_sharding), b["tasks"]),
+                key=b["key"])
 
     step_key = jax.random.key(23)
     if args.data_source == "host":
@@ -114,14 +150,20 @@ def run_episodic(args) -> None:
                                             meta.tasks_per_step, s),
                         key=jax.random.fold_in(step_key, s))
 
-    # distinct default dir per workload AND per learner: restoring a
-    # checkpoint into a different state template is a shape mismatch
-    ckpt_dir = args.ckpt_dir or f"/tmp/repro_train_ckpt_episodic_{args.learner}"
+    # distinct default dir per workload AND per state template: learner,
+    # plus grad_reduce/dcn_shards when compressed (opt['ef'] adds a
+    # (dcn_shards, ...) leaf) — restoring a checkpoint into a different
+    # template is a shape mismatch / missing-leaf KeyError
+    suffix = (f"_ef{meta.dcn_shards}"
+              if meta.grad_reduce == "compressed" else "")
+    ckpt_dir = args.ckpt_dir or \
+        f"/tmp/repro_train_ckpt_episodic_{args.learner}{suffix}"
     ckpt = CheckpointManager(ckpt_dir, keep=3)
     result = train(state, step, batch_at, args.steps, ckpt=ckpt,
                    ckpt_every=args.ckpt_every, state_template=state_abs,
                    log_every=max(args.steps // 10, 1),
-                   prefetch=meta.prefetch, donate=meta.donate)
+                   prefetch=meta.prefetch, donate=meta.donate,
+                   batch_put=batch_put)
     if not result.metrics_history:
         print(f"nothing to do: checkpoint already at step {result.step} "
               f"(resumed_from={result.resumed_from})")
@@ -155,7 +197,25 @@ def main() -> None:
     ap.add_argument("--learner", default="protonets",
                     choices=["protonets", "cnaps", "simple_cnaps"])
     ap.add_argument("--tasks-per-step", type=int, default=8)
-    ap.add_argument("--dp-shards", type=int, default=1)
+    ap.add_argument("--dp-shards", type=int, default=1,
+                    help="inner ICI data-parallel shards over the task "
+                         "axis (shard_map 'data' axis)")
+    ap.add_argument("--dcn-shards", type=int, default=1,
+                    help="outer host-level DCN shards: tasks split across "
+                         "hosts on a two-level (dcn, data) mesh and "
+                         "gradients reduce across hosts per --grad-reduce "
+                         "(emulate hosts on CPU with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--grad-reduce", choices=["pmean", "compressed"],
+                    default="pmean",
+                    help="cross-DCN gradient reduction: exact pmean, or "
+                         "int8 error-feedback compression "
+                         "(repro.optim.compress; residual checkpointed in "
+                         "opt_state['ef'])")
+    ap.add_argument("--accum-steps", type=int, default=1,
+                    help="sequential gradient-accumulation chunks per "
+                         "optimizer step, so --tasks-per-step can exceed "
+                         "per-host memory")
     ap.add_argument("--image-size", type=int, default=24)
     ap.add_argument("--prefetch", type=int, default=2,
                     help="background batch lookahead depth (0 = sync loop)")

@@ -133,14 +133,29 @@ def moe_ffn(p: Params, x: jnp.ndarray, cfg: MoEConfig,
 #     runs the grouped GEMMs, scatter-adds its partial outputs;
 #   * one all-gather (model) of activations in + one reduce-scatter out.
 # Wire/layer: 2 x T_loc x D instead of ~3 x T x k x D x f32.
+#
+# The boundary spec must MATCH the residual-stream layout, or GSPMD
+# reshards the full activation at every layer entry/exit (measured: f32
+# (B, S, D) all-gathers dominating the deepseek prefill cell, WORSE than
+# the GSPMD-scatter baseline).  Two layouts:
+#   * 'hidden' (default residual_spec): tokens over (pod,)data, D over
+#     model -> xl is (T_loc, D/m); the body all-gathers the HIDDEN axis
+#     and psum_scatters it back.
+#   * 'seq': the flattened token axis nests over ((pod,)data, model), D
+#     replicated -> the body all-gathers the TOKEN axis back to the data
+#     shard and psum_scatters tokens out.
+# Both move 2 x T_loc x D per layer inside the body and ZERO bytes at the
+# boundary.
 # ===========================================================================
 
 
-def _moe_local_body(cfg: MoEConfig, n_model: int, data_axes=("data",)):
+def _moe_local_body(cfg: MoEConfig, n_model: int, data_axes=("data",),
+                    gather_axis: int = 0):
     def body(xl, router, wg, wu, wd):
-        """Per-shard code. xl: (T_loc, D/m) — gathered to (T_loc, D).
+        """Per-shard code. xl: (T_loc, D/m) ['hidden': gather_axis=1] or
+        (T_loc/m, D) ['seq': gather_axis=0] — gathered to (T_loc, D).
         wg/wu/wd: this shard's (E_loc, ...) expert slice."""
-        xf = jax.lax.all_gather(xl, "model", axis=0, tiled=True)   # (T_loc, D)
+        xf = jax.lax.all_gather(xl, "model", axis=gather_axis, tiled=True)
         t_loc, d = xf.shape
         e, k = cfg.n_experts, cfg.top_k
         e_loc = e // n_model
@@ -184,7 +199,8 @@ def _moe_local_body(cfg: MoEConfig, n_model: int, data_axes=("data",)):
 
         y = jnp.zeros((t_loc, d), xl.dtype)
         y = y.at[my_tok.reshape(-1)].add(out.reshape(-1, d), mode="drop")
-        y = jax.lax.psum_scatter(y, "model", scatter_dimension=0, tiled=True)
+        y = jax.lax.psum_scatter(y, "model", scatter_dimension=gather_axis,
+                                 tiled=True)
         for ax in data_axes:          # incl. 'pod' on multi-pod meshes
             aux = jax.lax.pmean(aux, ax)
         aux = jax.lax.pmean(aux, "model")
@@ -193,33 +209,43 @@ def _moe_local_body(cfg: MoEConfig, n_model: int, data_axes=("data",)):
     return body
 
 
-def moe_ffn_sharded(p: Params, x: jnp.ndarray, cfg: MoEConfig, mesh
+def moe_ffn_sharded(p: Params, x: jnp.ndarray, cfg: MoEConfig, mesh,
+                    layout: str = "hidden"
                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Expert-parallel MoE over an explicit mesh (tokens: (pod,)data;
-    experts: model).  Falls back to moe_ffn when the shapes don't divide.
-    x: (T, D) global."""
+    experts: model).  ``layout`` names the residual-stream layout the
+    boundary specs must match ('hidden' | 'seq', see block comment above).
+    Falls back to moe_ffn when the shapes don't divide.  x: (T, D) global."""
     from jax.sharding import PartitionSpec as P
+
+    from repro.sharding import shard_map
     sizes = dict(mesh.shape)
     n_model = sizes.get("model", 1)
     n_data = sizes.get("data", 1) * sizes.get("pod", 1)
     t, d = x.shape
-    if (n_model <= 1 or cfg.n_experts % n_model
-            or t % (n_data * n_model)):
+    hidden = layout == "hidden"
+    divides = (t % n_data == 0 and d % n_model == 0) if hidden \
+        else t % (n_data * n_model) == 0
+    if n_model <= 1 or cfg.n_experts % n_model or not divides:
         return moe_ffn(p, x, cfg)
 
     data_axes = ("pod", "data") if "pod" in sizes else ("data",)
-    tok_axes = data_axes + ("model",)
-    body = _moe_local_body(cfg, n_model, data_axes)
+    if hidden:
+        x_spec = P(data_axes, "model")
+    else:
+        x_spec = P(data_axes + ("model",), None)
+    body = _moe_local_body(cfg, n_model, data_axes,
+                           gather_axis=1 if hidden else 0)
 
     def wrapped(xl, router, wg, wu, wd):
         return body(xl, router, wg, wu, wd)
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         wrapped, mesh=mesh,
-        in_specs=(P(tok_axes, None), P(None, None),
+        in_specs=(x_spec, P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
-        out_specs=(P(tok_axes, None), P()),
+        out_specs=(x_spec, P()),
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
     if cfg.n_shared > 0:

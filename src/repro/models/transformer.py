@@ -41,7 +41,11 @@ def moe_dispatch(lp: Params, h2d: jnp.ndarray, cfg: ModelConfig):
         from repro.sharding.ctx import _active_mesh
         mesh = _active_mesh()
         if mesh is not None and hasattr(mesh, "devices"):
-            return M.moe_ffn_sharded(lp, h2d, cfg.moe, mesh)
+            # boundary specs must match residual_spec's layout (else GSPMD
+            # reshards the full activation at every layer — see moe.py)
+            layout = (getattr(cfg, "activation_layout", "hidden")
+                      if cfg.shard_activations_model else "seq")
+            return M.moe_ffn_sharded(lp, h2d, cfg.moe, mesh, layout=layout)
     return M.moe_ffn(lp, h2d, cfg.moe)
 
 

@@ -332,6 +332,33 @@ def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
     return analyze(hlo_text)["collectives"]
 
 
+def collectives_report(compiled_or_text) -> Dict:
+    """Per-step collective wire bytes of a compiled executable.
+
+    Accepts a ``jax`` compiled object (anything with ``as_text()`` — the
+    result of ``jit(f).lower(...).compile()``) or raw optimized-HLO text,
+    and returns::
+
+        {"per_kind": {kind: {result_bytes, wire_bytes, count, max_group}},
+         "total_wire_bytes": float,       # sum over kinds, per chip
+         "count": float}                  # total collective launches
+
+    Wire bytes are ring-corrected per chip (see module doc), so
+    ``total_wire_bytes / link_bandwidth`` is the step's collective
+    time bound.  This is the same walk the dry-run records and the
+    shard_map-vs-GSPMD wire-bytes regression guard assert on; the
+    two-level DP engine's tests and ``benchmarks/dp_scaling.py`` use it to
+    account the cross-host gradient-reduction traffic per train step."""
+    text = compiled_or_text if isinstance(compiled_or_text, str) \
+        else compiled_or_text.as_text()
+    per_kind = collective_bytes(text)
+    return dict(
+        per_kind=per_kind,
+        total_wire_bytes=sum(r["wire_bytes"] for r in per_kind.values()),
+        count=sum(r["count"] for r in per_kind.values()),
+    )
+
+
 def total_collective_seconds(per_kind: Dict[str, Dict[str, float]],
                              link_bw: float) -> float:
     """Wire bytes are already ring-corrected; just divide by link bandwidth."""

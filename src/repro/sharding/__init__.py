@@ -2,7 +2,33 @@
 
 Also re-exports ``shard_map`` across the jax relocation (it moved from
 ``jax.experimental.shard_map`` to top-level ``jax.shard_map``); all repo
-code and test snippets import it from here.
+code and test snippets import it from here — calling ``jax.shard_map``
+directly regresses on older jax (that exact drift broke the optimized MoE
+dispatch variant; see ROADMAP).
+
+Two-level DP mesh contract (the task-batched meta-training engine,
+``repro.core.episodic_train.make_batched_meta_train_step``):
+
+* ``repro.launch.mesh.make_two_level_dp_mesh(dcn, dp)`` builds a
+  ``(dcn_axis='dcn', dp_axis='data')`` mesh — the outer ``dcn`` axis is
+  the slow cross-host DCN domain (rows align with hosts because
+  ``jax.devices()`` orders devices process-major), the inner ``data``
+  axis is the fast per-host ICI domain.
+* The task axis of a ``TaskBatch`` shards over BOTH axes,
+  ``P(('dcn', 'data'))``; params and optimizer state are replicated
+  (``P()``), except the compressed-reduction error-feedback residual
+  ``opt_state['ef']`` whose leading axis shards ``P('dcn')`` (one
+  residual per host; checkpointed like any other opt-state leaf).
+* Gradients ``pmean`` first over ``data`` (cheap, per host), then reduce
+  once over ``dcn`` — exact ``pmean`` or error-feedback
+  ``compressed_psum`` (``repro.optim.compress``).  With ``accum_steps``
+  the per-shard tasks are scanned in chunks BEFORE the reduction, so the
+  collective count per optimizer step never grows.
+* At ``dcn`` size 1 the extra reduction is a singleton all-reduce and the
+  engine is bit-identical to the 1-D ``make_dp_mesh`` path (tested in
+  tests/test_multihost.py).  Per-step collective wire bytes are
+  accounted by ``repro.roofline.hlo.collectives_report`` and tracked in
+  ``benchmarks/dp_scaling.py``.
 """
 
 try:

@@ -103,6 +103,7 @@ def train(state: PyTree,
           log_every: int = 0,
           prefetch: int = 0,
           donate: bool = False,
+          batch_put: Optional[Callable] = None,
           max_span: int = 64) -> TrainResult:
     """Run (and resume) training.  ``batch_at(step)`` must be deterministic
     in ``step`` — together with checkpointed state that is what makes
@@ -118,7 +119,9 @@ def train(state: PyTree,
     ``max_span`` where per-step straggler attribution matters.
     ``donate=True`` donates the state to the jitted step so params/opt
     state update in place — the caller's input ``state`` is consumed by
-    the first step."""
+    the first step.  ``batch_put`` overrides the prefetcher's H2D
+    transfer (e.g. a sharded ``device_put`` matching a two-level mesh
+    layout)."""
     start = 0
     resumed_from = None
     if ckpt is not None and state_template is not None:
@@ -134,7 +137,8 @@ def train(state: PyTree,
     source = batch_at
     pf = None
     if prefetch > 0 and start < num_steps:
-        pf = Prefetcher(batch_at, start, num_steps, depth=prefetch)
+        pf = Prefetcher(batch_at, start, num_steps, depth=prefetch,
+                        put=batch_put)
         source = pf.get
     try:
         pending: List[Dict] = []      # dispatched, not yet committed

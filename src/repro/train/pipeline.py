@@ -45,7 +45,13 @@ class Prefetcher:
     """
 
     def __init__(self, batch_at: Callable[[int], PyTree], start: int,
-                 stop: int, depth: int = 2, to_device: bool = True):
+                 stop: int, depth: int = 2, to_device: bool = True,
+                 put: Optional[Callable[[PyTree], PyTree]] = None):
+        """``put`` overrides the default ``jax.device_put`` — pass a
+        sharded transfer (e.g. ``device_put`` with a ``NamedSharding``
+        over the task axis) so batches land in the mesh layout the
+        sharded step consumes, instead of on device 0 with a resharding
+        copy inside the step dispatch."""
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
         self._q: queue.Queue = queue.Queue(maxsize=depth)
@@ -54,6 +60,7 @@ class Prefetcher:
         self._next = start
         self._batch_at = batch_at
         self._to_device = to_device
+        self._device_put = put if put is not None else jax.device_put
         self._thread = threading.Thread(
             target=self._worker, args=(start, stop), daemon=True,
             name="batch-prefetcher")
@@ -75,7 +82,7 @@ class Prefetcher:
                     return
                 batch = self._batch_at(s)
                 if self._to_device:
-                    batch = jax.device_put(batch)
+                    batch = self._device_put(batch)
                 if not self._put((s, batch)):
                     return
             self._put(_DONE)

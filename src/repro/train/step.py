@@ -77,36 +77,54 @@ def make_eval_step(cfg: ModelConfig) -> Callable:
 # from the step index by the data side (repro.data.episodic.task_batch_at).
 
 
-def make_episodic_init_state(learner, adamw_cfg: AdamWConfig) -> Callable:
+def make_episodic_init_state(learner, adamw_cfg: AdamWConfig,
+                             meta_cfg=None) -> Callable:
+    """``meta_cfg`` with ``grad_reduce='compressed'`` adds the per-DCN-shard
+    error-feedback residual to the optimizer state (``opt['ef']``), so
+    checkpoints carry it and compressed-reduction restarts stay exact."""
+    from repro.core.episodic_train import init_ef_state
     from repro.optim import adamw_init
 
     def init_state(key) -> State:
         params = learner.init(key)
-        return dict(params=params, opt=adamw_init(params, adamw_cfg))
+        opt = adamw_init(params, adamw_cfg)
+        if meta_cfg is not None and meta_cfg.grad_reduce == "compressed":
+            opt["ef"] = init_ef_state(params, meta_cfg.dcn_shards)
+        return dict(params=params, opt=opt)
 
     return init_state
 
 
 def make_episodic_train_step(learner, lite, meta_cfg,
                              adamw_cfg: AdamWConfig = None,
-                             mesh=None, dp_axis: str = "data") -> Callable:
+                             mesh=None, dp_axis: str = "data",
+                             dcn_axis: str = "dcn") -> Callable:
     """meta_cfg: repro.configs.base.MetaTrainConfig (tasks_per_step is the
-    data side's concern; dp_shards>1 requires ``mesh``).  A configured
+    data side's concern; ``dp_shards>1`` or ``dcn_shards>1`` requires
+    ``mesh`` — a 1-D ``make_dp_mesh`` or a two-level
+    ``make_two_level_dp_mesh`` respectively).  A configured
     ``meta_cfg.schedule`` replaces the constant lr with a per-step lr
     keyed on the optimizer update count."""
     from repro.core.episodic_train import make_batched_meta_train_step
     from repro.optim.schedules import schedule_for
 
     adamw_cfg = adamw_cfg or AdamWConfig(weight_decay=0.0)
-    if meta_cfg.dp_shards > 1 and mesh is None:
-        raise ValueError(f"dp_shards={meta_cfg.dp_shards} requires a mesh "
-                         f"(e.g. repro.launch.mesh.make_dp_mesh)")
+    needs_mesh = meta_cfg.dp_shards > 1 or meta_cfg.dcn_shards > 1 \
+        or meta_cfg.grad_reduce == "compressed"
+    if needs_mesh and mesh is None:
+        raise ValueError(f"dp_shards={meta_cfg.dp_shards} / "
+                         f"dcn_shards={meta_cfg.dcn_shards} / "
+                         f"grad_reduce={meta_cfg.grad_reduce!r} requires a "
+                         f"mesh (repro.launch.mesh.make_dp_mesh or "
+                         f"make_two_level_dp_mesh)")
     inner = make_batched_meta_train_step(
         learner, lite, adamw=adamw_cfg, lr=meta_cfg.lr,
         max_grad_norm=meta_cfg.max_grad_norm,
         schedule=schedule_for(meta_cfg.schedule, meta_cfg.lr,
                               meta_cfg.warmup_steps, meta_cfg.total_steps),
-        mesh=mesh if meta_cfg.dp_shards > 1 else None, dp_axis=dp_axis)
+        mesh=mesh if needs_mesh else None, dp_axis=dp_axis,
+        dcn_axis=dcn_axis, grad_reduce=meta_cfg.grad_reduce,
+        accum_steps=meta_cfg.accum_steps)
 
     def train_step(state: State, batch: Dict) -> Tuple[State, Dict]:
         # the configured kernel backend is bound HERE, at trace time:

@@ -1,9 +1,65 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the real
 1-CPU device; only launch/dryrun.py (and subprocess tests) fake devices."""
 import jax
+import jax.numpy as jnp
+import numpy as np
 import pytest
 
 
 @pytest.fixture(scope="session")
 def key():
     return jax.random.key(0)
+
+
+def make_pretrained_stub_backbone(image_size: int = 16, channels: int = 3,
+                                  feature_dim: int = 32, seed: int = 7,
+                                  noise_gain: float = 2.0):
+    """Tiny DETERMINISTIC 'pretrained' backbone stub (ROADMAP open item).
+
+    The synthetic episodic tasks put the class signal in a low-frequency
+    pattern under heavy per-pixel noise, so a fixed 4x4 average-pool +
+    seeded random projection is already a decent 'pretrained' feature
+    extractor (pooling averages the noise down ~4x).  The second feature
+    half projects the RAW pixels — noise-dominated distractor dims that
+    dilute the metric head until the (trainable) FiLM generator learns to
+    suppress them.  That gives meta-training real, reliable headroom:
+    held-out accuracy strictly improves within a small test budget,
+    restoring the strict assertion the frozen-random-backbone setting
+    could not support (see test_system.py).
+
+    Weights come from a FIXED seed, not from ``init``'s key, so every
+    test sees the identical 'pretrained' checkpoint.
+    """
+    from repro.core.film import apply_film
+    from repro.models.backbone import BackboneDef
+
+    assert image_size % 4 == 0, image_size
+    half = feature_dim // 2
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    pooled_dim = 4 * 4 * channels
+    flat_dim = image_size * image_size * channels
+    w_sig = jax.random.normal(k1, (pooled_dim, half)) / np.sqrt(pooled_dim)
+    w_noise = jax.random.normal(k2, (flat_dim, half)) / np.sqrt(flat_dim)
+
+    def init(key):
+        return dict(w_sig=w_sig, w_noise=w_noise)
+
+    def features(p, x, film):
+        b, h, w, c = x.shape
+        f = h // 4
+        pooled = x.reshape(b, 4, f, 4, f, c).mean(axis=(2, 4))
+        sig = jnp.tanh(pooled.reshape(b, -1) @ p["w_sig"].astype(x.dtype))
+        noi = jnp.tanh(x.reshape(b, -1) @ p["w_noise"].astype(x.dtype))
+        feats = jnp.concatenate([sig, noise_gain * noi], axis=-1)
+        if film is not None:
+            feats = apply_film(feats, film[0]["gamma"], film[0]["beta"],
+                               channel_axis=-1)
+        return feats
+
+    return BackboneDef(init=init, features=features, feature_dim=feature_dim,
+                       film_sites=(feature_dim,), name="pretrained_stub")
+
+
+@pytest.fixture(scope="session")
+def pretrained_stub_backbone():
+    return make_pretrained_stub_backbone()

@@ -44,7 +44,11 @@ def test_simple_cnaps_lite_end_to_end(key):
     asserted here with seed-averaged tolerances, is the paper's qualitative
     claims: (a) one-forward-pass adaptation works — held-out accuracy far
     above chance from random features; (b) LITE meta-training is stable —
-    finite losses and no collapse of held-out accuracy."""
+    finite losses and no collapse of held-out accuracy.  The STRICT
+    improvement assertion lives in
+    test_simple_cnaps_training_improves_with_pretrained_stub, which swaps
+    in the deterministic pretrained-backbone stub (the paper's actual
+    warm-start regime)."""
     from repro.core.episodic_train import make_batched_meta_train_step
     from repro.data.episodic import task_batch_at
     from repro.optim import AdamWConfig, adamw_init
@@ -85,6 +89,62 @@ def test_simple_cnaps_lite_end_to_end(key):
     assert np.mean(acc0s) > 0.28, acc0s
     # (b) training is stable: seed-mean held-out accuracy within tolerance
     assert np.mean(acc1s) > np.mean(acc0s) - 0.06, (acc0s, acc1s)
+
+
+def test_simple_cnaps_training_improves_with_pretrained_stub(
+        pretrained_stub_backbone):
+    """STRICT 'training improves held-out accuracy' for Simple CNAPs
+    (ROADMAP open item).  The paper meta-trains FiLM on a frozen
+    PRE-TRAINED feature extractor; the deterministic stub backbone
+    (tests/conftest.py) reproduces that regime — informative pooled
+    features plus noise-dominated distractor dims that the trainable FiLM
+    generator learns to suppress.  Unlike the frozen-random-backbone
+    setting (previous test), held-out accuracy rises reliably on EVERY
+    seed within a small budget (measured: +0.18 to +0.31 over 3 seeds at
+    30 steps; asserted at half that margin over 2 seeds)."""
+    from repro.core.episodic_train import make_batched_meta_train_step
+    from repro.data.episodic import task_batch_at
+    from repro.optim import AdamWConfig, adamw_init
+
+    lr = make_learner(MetaLearnerConfig(kind="simple_cnaps", way=5),
+                      pretrained_stub_backbone,
+                      SetEncoderConfig(kind="conv", conv_blocks=2,
+                                       conv_width=8, task_dim=16))
+    tcfg = EpisodicImageConfig(way=5, shot=10, query_per_class=4,
+                               image_size=16)
+    spec = LiteSpec(h=10, chunk_size=16)
+    adamw = AdamWConfig(weight_decay=0.0)
+    step = jax.jit(make_batched_meta_train_step(lr, spec, adamw=adamw,
+                                                lr=2e-3))
+
+    def eval_acc(p):
+        accs = []
+        for i in range(8):
+            t = sample_image_task(jax.random.fold_in(jax.random.key(99), i),
+                                  tcfg)
+            st = lr.adapt(p, t.support_x, t.support_y)
+            pred = jnp.argmax(lr.predict(p, st, t.query_x), -1)
+            accs.append(float(jnp.mean((pred == t.query_y)
+                                       .astype(jnp.float32))))
+        return float(np.mean(accs))
+
+    gains = []
+    for seed in range(2):
+        params = lr.init(jax.random.key(seed))
+        opt = adamw_init(params, adamw)
+        acc0 = eval_acc(params)
+        dk, sk = jax.random.key(50 + seed), jax.random.key(150 + seed)
+        for s in range(30):
+            batch = task_batch_at(dk, tcfg, 4, s)
+            params, opt, m = step(params, opt, batch,
+                                  jax.random.fold_in(sk, s))
+            assert np.isfinite(float(m["loss"])), (seed, s)
+        acc1 = eval_acc(params)
+        gains.append(acc1 - acc0)
+        # every seed must strictly improve
+        assert acc1 > acc0 + 0.05, (seed, acc0, acc1)
+    # and the mean gain must be substantial
+    assert np.mean(gains) > 0.10, gains
 
 
 def test_episodic_lm_with_lite(key):

@@ -291,3 +291,76 @@ def test_dp_step_rejects_indivisible_batch(key):
     with pytest.raises(ValueError, match="divisible"):
         step(params, adamw_init(params, AdamWConfig()), batch,
              jax.random.key(0))
+
+
+# -- two-level engine: config-time validation + local accumulation ----------
+
+
+def test_meta_train_config_validates_at_construction():
+    """Divisibility and reduce-mode errors must fire when the CONFIG is
+    built, not at trace time deep inside shard_map."""
+    from repro.configs.base import MetaTrainConfig
+
+    MetaTrainConfig(tasks_per_step=8, dp_shards=2, dcn_shards=2,
+                    accum_steps=2)      # 8 % (2*2*2) == 0: fine
+    with pytest.raises(ValueError, match="divisible"):
+        MetaTrainConfig(tasks_per_step=8, dp_shards=3)
+    with pytest.raises(ValueError, match="divisible"):
+        MetaTrainConfig(tasks_per_step=8, dcn_shards=2, accum_steps=3)
+    with pytest.raises(ValueError, match="grad_reduce"):
+        MetaTrainConfig(grad_reduce="topk")
+    with pytest.raises(ValueError, match=">= 1"):
+        MetaTrainConfig(accum_steps=0)
+
+
+def test_dp_mesh_errors_are_actionable():
+    """Oversubscribed meshes must tell the user about CPU device-count
+    emulation instead of a bare count mismatch."""
+    from repro.launch.mesh import make_dp_mesh, make_two_level_dp_mesh
+
+    n = len(jax.devices())
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        make_dp_mesh(n + 1)
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        make_two_level_dp_mesh(n + 1, 2)
+
+
+def test_compressed_requires_two_level_mesh(key):
+    class FakeMesh:
+        shape = dict(data=2)
+
+    with pytest.raises(ValueError, match="two-level"):
+        make_batched_meta_train_step(_learner(), SPEC, mesh=FakeMesh(),
+                                     grad_reduce="compressed")
+
+
+def test_local_accumulation_matches_unaccumulated(key):
+    """accum_steps chunks the task axis sequentially; per-task keys ride on
+    GLOBAL ids so the mean loss/grads match the one-shot step to fp32
+    accumulation tolerance (and exactly at accum_steps=1)."""
+    lr = _learner()
+    params = lr.init(key)
+    adamw = AdamWConfig(weight_decay=0.0)
+    opt = adamw_init(params, adamw)
+    batch = collate_task_batch(_tasks(4))
+    k = jax.random.key(5)
+    p1, _, m1 = jax.jit(make_batched_meta_train_step(lr, SPEC, adamw=adamw))(
+        params, opt, batch, k)
+    p2, _, m2 = jax.jit(make_batched_meta_train_step(
+        lr, SPEC, adamw=adamw, accum_steps=2))(params, opt, batch, k)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_accum_step_rejects_indivisible_batch(key):
+    lr = _learner()
+    params = lr.init(key)
+    step = make_batched_meta_train_step(lr, SPEC, accum_steps=3)
+    with pytest.raises(ValueError, match="divisible"):
+        step(params, adamw_init(params, AdamWConfig()),
+             collate_task_batch(_tasks(4)), jax.random.key(0))
