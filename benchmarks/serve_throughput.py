@@ -1,7 +1,7 @@
-"""Episodic serving throughput: tasks adapted/sec, queries/sec, state-cache
-hit-rate, and the compile counter over a ragged request stream.
+"""Episodic serving throughput: tasks adapted/sec, queries/sec, state-store
+hit-rate, p50/p99 latency, and the compile counter over a request stream.
 
-Three comparisons:
+Four comparisons:
 
 * ``adapt_loop`` vs ``adapt_batch`` — per-task ``learner.adapt`` dispatches
   vs ONE vmapped ``adapt_batch`` over the same T tasks (the serving
@@ -10,8 +10,15 @@ Three comparisons:
   ONE micro-batched ``predict_batch`` (the engine's per-step dispatch).
 * ``engine_cold`` vs ``engine_warm`` — the full EpisodicServeEngine on a
   request stream of distinct users, then the SAME users again: warm
-  traffic skips adaptation via the LRU task-state cache, and the compile
-  counters must not grow.
+  traffic skips adaptation via the task-state store, the compile counters
+  must not grow, and both rows report nearest-rank p50/p99 adapt latency
+  (enqueue -> state ready) and query latency (enqueue -> first logit)
+  from the engine's clock.
+* ``fomaml_readapt`` vs ``fomaml_rehydrate`` — re-adapting a task whose
+  state was evicted vs rehydrating it from the disk warm tier
+  (checkpoint-serialized spill): fomaml is the expensive re-adapt tail
+  (see table1_adaptation_cost.csv), exactly what the two-tier store
+  avoids paying again.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py
 """
@@ -36,7 +43,8 @@ from repro.core.set_encoder import SetEncoderConfig
 from repro.data.episodic import (EpisodicImageConfig, collate_task_batch,
                                  plan_buckets, sample_image_task)
 from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
-from repro.serve.episodic import EpisodicRequest, EpisodicServeEngine
+from repro.serve.episodic import (EpisodicRequest, EpisodicServeEngine,
+                                  WarmTaskStore, _pctl)
 
 
 def main() -> None:
@@ -76,6 +84,11 @@ def main() -> None:
                     queries_per_sec=r.get("queries_per_sec", ""),
                     speedup=r.get("speedup", ""),
                     hit_rate=r.get("hit_rate", ""),
+                    wall_us=r.get("wall_us", ""),
+                    adapt_p50_us=r.get("adapt_p50_us", ""),
+                    adapt_p99_us=r.get("adapt_p99_us", ""),
+                    query_p50_us=r.get("query_p50_us", ""),
+                    query_p99_us=r.get("query_p99_us", ""),
                     adapt_compiles=r.get("adapt_compiles", ""),
                     predict_compiles=r.get("predict_compiles", ""))
 
@@ -159,13 +172,27 @@ def main() -> None:
 
     n_req = args.engine_requests
     n_queries = sum(r.n_queries for r in cold)
+
+    def wave_pctls(reqs):
+        """Per-wave nearest-rank percentiles from the request timestamps
+        (the engine's cumulative stats would mix the waves)."""
+        alat = [(r.t_adapt - r.t_enqueue) * 1e6 for r in reqs
+                if r.t_adapt is not None]
+        qlat = [(r.t_first_logit - r.t_enqueue) * 1e6 for r in reqs
+                if r.t_first_logit is not None]
+        return dict(adapt_p50_us=round(_pctl(alat, 50)),
+                    adapt_p99_us=round(_pctl(alat, 99)),
+                    query_p50_us=round(_pctl(qlat, 50)),
+                    query_p99_us=round(_pctl(qlat, 99)))
+
     rows.append(blank(dict(
         mode="engine_cold", tasks=n_req,
         tasks_per_sec=round(s_cold["tasks_adapted"] / dt_cold, 1),
         queries_per_sec=round(n_queries / dt_cold, 1),
         hit_rate=round(s_cold["hit_rate"], 3),
         adapt_compiles=s_cold["adapt_compiles"],
-        predict_compiles=s_cold["predict_compiles"])))
+        predict_compiles=s_cold["predict_compiles"],
+        **wave_pctls(cold))))
     rows.append(blank(dict(
         mode="engine_warm", tasks=n_req,
         queries_per_sec=round(n_queries / dt_warm, 1),
@@ -174,9 +201,42 @@ def main() -> None:
             (s_warm["cache_hits"] - s_cold["cache_hits"]) /
             max(n_req, 1), 3),
         adapt_compiles=s_warm["adapt_compiles"],
-        predict_compiles=s_warm["predict_compiles"])))
+        predict_compiles=s_warm["predict_compiles"],
+        **wave_pctls(warm))))
+
+    # -- warm-tier rehydrate vs re-adaptation (fomaml: the expensive tail) ---
+    import tempfile
+
+    fomaml = make_learner(
+        MetaLearnerConfig(kind="fomaml", way=args.way, inner_steps=15),
+        backbone,
+        SetEncoderConfig(kind="conv", conv_blocks=1, conv_width=8,
+                         task_dim=16))
+    f_params = fomaml.init(jax.random.key(1))
+    f_task = tasks[0]
+    f_key = task_key(key, 0)
+    adapt_j = jax.jit(lambda p, sx, sy, k: fomaml.adapt(
+        p, sx, sy, key=k, lite=lite))
+    st = jax.block_until_ready(
+        adapt_j(f_params, f_task.support_x, f_task.support_y, f_key))
+    with tempfile.TemporaryDirectory() as warm_dir:
+        warm_store = WarmTaskStore(warm_dir)
+        warm_store.put(0, st)
+        t_readapt = time_median(lambda: jax.block_until_ready(
+            adapt_j(f_params, f_task.support_x, f_task.support_y, f_key)),
+            args.iters)
+        t_rehydrate = time_median(lambda: jax.block_until_ready(
+            warm_store.get(0)), args.iters)
+    rows.append(blank(dict(mode="fomaml_readapt", tasks=1,
+                           wall_us=round(1e6 * t_readapt), speedup=1.0)))
+    rows.append(blank(dict(mode="fomaml_rehydrate", tasks=1,
+                           wall_us=round(1e6 * t_rehydrate),
+                           speedup=round(t_readapt / t_rehydrate, 2))))
 
     emit(rows, "serve_throughput")
+    print(f"# warm-tier rehydrate vs fomaml re-adapt: "
+          f"{t_readapt / t_rehydrate:.2f}x cheaper "
+          f"({1e6 * t_readapt:.0f} vs {1e6 * t_rehydrate:.0f} us)")
     print(f"# adapt_batch speedup over per-task adapt loop: "
           f"{t_loop / t_batch:.2f}x")
     print(f"# predict_batch speedup over per-task query loop: "

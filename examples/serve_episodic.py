@@ -76,6 +76,11 @@ def main() -> None:
     print(f"  adapted {s['tasks_adapted']} tasks, cache hit-rate "
           f"{s['hit_rate']:.2f}, compiles adapt={s['adapt_compiles']} "
           f"predict={s['predict_compiles']}")
+    print(f"  adapt latency p50/p99 {s['adapt_p50_us']:.0f}/"
+          f"{s['adapt_p99_us']:.0f} us, first-logit p50/p99 "
+          f"{s['query_p50_us']:.0f}/{s['query_p99_us']:.0f} us "
+          f"(set warm_dir= to spill evicted states to disk instead of "
+          f"re-adapting)")
     for r in reqs[: args.users + 2]:
         print(f"  uid={r.uid} cache_hit={r.cache_hit} "
               f"preds={r.predictions().tolist()}")

@@ -9,15 +9,23 @@ LM token decode (default):
 Episodic personalization (``--episodic``): each request is a support set
 to adapt on + a query stream to answer; all four learner kinds serve
 through the same batched ``adapt_batch``/``predict_batch`` contract, with
-LITE-chunked forward-only adaptation, an LRU task-state cache keyed by
-task uid (``--repeat-frac`` controls how much of the traffic is repeat
-users), micro-batched query dispatch, and the aggregation kernels
+LITE-chunked forward-only adaptation, a TWO-TIER task-state store keyed
+by task uid (an L1 LRU of ``--cache-capacity`` resident states over an
+optional ``--warm-dir`` disk tier: evicted states spill through the
+checkpoint serialization and repeat visitors rehydrate bit-exactly
+instead of re-adapting; ``--repeat-frac`` controls how much of the
+traffic is repeat users), continuous batching with per-request latency
+accounting (p50/p99 adapt and query latency in the summary), SLO-aware
+scheduling (``--query-slo-us`` lets near-deadline query chunks preempt
+an adapt wave, cost-estimated from ``--adapt-cost-hint-us`` until
+measured), micro-batched query dispatch, and the aggregation kernels
 (class statistics, Mahalanobis head) routed through
 ``repro.kernels.dispatch`` (``--kernel-backend``):
 
     PYTHONPATH=src python -m repro.launch.serve --episodic \
         --learner protonets --requests 16 --slots 4 --shot 10 \
-        --repeat-frac 0.5 --lite-chunk 32
+        --repeat-frac 0.5 --lite-chunk 32 --cache-capacity 4 \
+        --warm-dir /tmp/warm_states --query-slo-us 50000
 
 Runs the smoke config on this container; on a TPU slice the same engines
 serve the full config (params sharded by repro.sharding.rules — see
@@ -83,7 +91,11 @@ def run_episodic(args) -> None:
                                  n_slots=args.slots,
                                  query_chunk=args.query_chunk,
                                  support_buckets=buckets,
-                                 kernel_backend=args.kernel_backend)
+                                 kernel_backend=args.kernel_backend,
+                                 cache_capacity=args.cache_capacity,
+                                 warm_dir=args.warm_dir,
+                                 query_slo_us=args.query_slo_us,
+                                 adapt_cost_hint_us=args.adapt_cost_hint_us)
     # cold wave first so every warm request finds its user's state cached
     # regardless of slot count — warm traffic measures the cache, not
     # admission-wave luck
@@ -101,6 +113,12 @@ def run_episodic(args) -> None:
           f"cache hit-rate {s['hit_rate']:.2f}, "
           f"compiles adapt={s['adapt_compiles']} "
           f"predict={s['predict_compiles']}")
+    print(f"  latency: adapt p50/p99 {s['adapt_p50_us']:.0f}/"
+          f"{s['adapt_p99_us']:.0f} us, query (first logit) p50/p99 "
+          f"{s['query_p50_us']:.0f}/{s['query_p99_us']:.0f} us; "
+          f"store: evictions={s['evictions']} spills={s['spills']} "
+          f"rehydrates={s['rehydrates']}, "
+          f"slo_preemptions={s['slo_preemptions']}")
     for r in reqs[:4]:
         print(f"  req uid={r.uid}: cache_hit={r.cache_hit} "
               f"preds={r.predictions()[:8].tolist()}")
@@ -127,6 +145,22 @@ def main() -> None:
                          "(task-state cache hits)")
     ap.add_argument("--lite-chunk", type=int, default=32,
                     help="LITE serve-time adaptation chunk size")
+    ap.add_argument("--cache-capacity", type=int, default=64,
+                    help="L1 task-state LRU capacity (resident adapted "
+                         "states); evictions spill to --warm-dir when set")
+    ap.add_argument("--warm-dir", default=None,
+                    help="disk warm tier for evicted task states: spilled "
+                         "via the checkpoint serialization, rehydrated "
+                         "bit-exactly on a repeat uid instead of "
+                         "re-adapting (default: off, evictions discard)")
+    ap.add_argument("--query-slo-us", type=float, default=None,
+                    help="per-request first-logit SLO in microseconds: a "
+                         "pending adapt wave is deferred when it would "
+                         "push a live lane's queries past this deadline")
+    ap.add_argument("--adapt-cost-hint-us", type=float, default=None,
+                    help="seed for the EWMA adapt-dispatch cost estimate "
+                         "the SLO scheduler plans with (measured "
+                         "thereafter)")
     ap.add_argument("--lite-dtype", choices=["bfloat16", "float16"],
                     default=None,
                     help="serve-time adaptation compute dtype")

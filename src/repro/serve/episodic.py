@@ -1,44 +1,54 @@
-"""Episodic serving engine: adapt-many-tasks personalization serving.
+"""Episodic serving engine: production-shaped adapt-many-tasks serving.
 
 The LM engine (repro.serve.engine) serves token decode; this engine serves
 the paper's test-time workload — ORBIT-style per-user personalization at
 traffic scale.  A request is one episode: a support set to adapt on and a
 query stream to answer.  The paper's headline tradeoff is that
-meta-learners are cheap here ("just a few optimization steps or a single
-forward pass" per new task); this engine turns that per-task cheapness
-into throughput:
+meta-learners are cheap at test time ("just a few optimization steps or a
+single forward pass" per new task); at "millions of users" the scarce
+resource is therefore millions of *adapted task states*, not params, and
+re-adaptation is the expensive tail (fomaml re-adapt is ~66x a query
+chunk per table1_adaptation_cost.csv).  The engine is built around that:
 
-* **Slotted scheduler** — up to ``n_slots`` live tasks, continuous
-  admission (requests join as slots free), in the spirit of
-  :class:`repro.serve.engine.ServeEngine`.
-* **Batched adaptation** — slots awaiting adaptation are collated into
-  padded :class:`repro.core.episodic.TaskBatch` es and adapted in one
-  ``learner.adapt_batch`` dispatch per planned support bucket: the
-  uniform, mask-aware batched contract all four learner kinds share.  A
-  task's pad cap comes from its OWN support size and its PRNG key is
-  ``task_key(base, uid)``, so a task's state is a pure function of
-  (params, support, uid) — recomputing equals the cache, regardless of
-  co-tenants.
+* **Continuous batching with admission control** — ``submit`` enqueues;
+  each ``step`` admits FIFO from the queue into up to ``n_slots`` live
+  task lanes (head-of-line: a request whose uid is already live defers so
+  one uid is never adapted twice concurrently), batch-adapts newly
+  admitted tasks, and micro-batches the next query chunk of every live
+  task, all through a per-shape AOT compile cache
+  (:class:`repro.train.pipeline.BucketedStepCache`) padded to fixed
+  shapes so compile counters stay flat and co-scheduling is bit-exact.
+* **Per-request latency accounting from an injectable clock** — requests
+  carry enqueue/admit/adapt/first-logit/done timestamps stamped from the
+  engine ``clock`` (default ``time.monotonic``; tests inject a manually
+  advanced ``FakeClock``), and ``stats()`` reports exact nearest-rank
+  p50/p99 adapt latency (enqueue → state ready) and query latency
+  (enqueue → first logit) plus the current queue depth.
+* **SLO-aware dispatch scheduling** — adaptation is the expensive tail,
+  query chunks are cheap.  With ``query_slo_us`` set, a step whose
+  pending adapt wave would push a live lane's first-unserved-query past
+  its deadline (estimated from an EWMA of measured adapt-dispatch cost,
+  seedable via ``adapt_cost_hint_us``) *defers the adapt wave* and spends
+  the dispatch on queries instead; a deadline that is already missed no
+  longer preempts (the SLO is blown either way), so adapt waves cannot
+  starve.  ``stats()['slo_preemptions']`` counts the decisions.
+* **Two-tier task-state store** — adapted states live in an L1 LRU
+  (:class:`TaskStateCache`) keyed by task uid; with ``warm_dir`` set, L1
+  eviction *spills* the state to a disk warm tier
+  (:class:`WarmTaskStore`) through the checkpoint serialization
+  (``repro.train.checkpoint.save_array_tree``), and a repeat uid that
+  misses L1 *rehydrates* from the warm tier instead of re-adapting —
+  bit-exact to the originally adapted state, with unchanged avals so the
+  compiled predict dispatch is reused (counters flat).  Without
+  ``warm_dir`` eviction discards, as before.
 * **LITE-chunked forward-only adaptation** — the aggregating learners run
   the serve estimators (repro.core.lite.serve_sum / serve_segment_sum):
   exact values, no-grad chunks, so a 1000-image support set adapts under
-  an O(chunk_size) activation bound, optionally in
-  ``LiteSpec.compute_dtype`` with fp32 accumulation.
-* **LRU task-state cache** — adapted states keyed by task uid; a repeat
-  request (same user, new queries) skips adaptation entirely and may even
-  omit its support set.
-* **Query micro-batching** — each step serves the next fixed-size query
-  chunk of EVERY live task in ONE ``predict_batch`` dispatch.
-* **Compile discipline** — both dispatches go through a per-shape AOT
-  cache (:class:`repro.train.pipeline.BucketedStepCache`), and every
-  dispatch is padded to the full ``n_slots`` task lanes + a planned
-  support bucket + the fixed query chunk, so a ragged request stream hits
-  a closed set of compiled shapes (``stats()`` exposes the counters) AND
-  results are bit-exact regardless of how requests are co-scheduled (the
-  program never changes shape, only lane occupancy).
+  an O(chunk_size) activation bound.
 
     engine = EpisodicServeEngine(learner, params, n_slots=4,
-                                 support_buckets=(64,), query_chunk=8)
+                                 support_buckets=(64,), query_chunk=8,
+                                 warm_dir="/tmp/warm", query_slo_us=5e4)
     engine.run_to_completion([EpisodicRequest(uid=0, support_x=sx,
                                               support_y=sy, query_x=qx)])
 """
@@ -46,7 +56,11 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Dict, Iterator, List, Optional, Sequence
+import math
+import os
+import pathlib
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -59,20 +73,36 @@ from repro.core.lite import LiteSpec
 from repro.core.meta_learners import MetaLearner
 from repro.data.episodic import (bucket_for, collate_task_batch,
                                  iter_query_chunks)
+from repro.train.checkpoint import load_array_tree, save_array_tree
 from repro.train.pipeline import BucketedStepCache
 
 PyTree = Any
+
+
+def _pctl(xs: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (classic definition): exact and assertable
+    against a scripted arrival stream — no interpolation."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[max(0, math.ceil(q / 100.0 * len(s)) - 1)]
 
 
 @dataclasses.dataclass
 class EpisodicRequest:
     """One personalization episode.
 
-    ``uid`` is the task identity (the state-cache key): two requests with
+    ``uid`` is the task identity (the state-store key): two requests with
     the same uid are the same task, and the second may omit its support
-    set entirely if the first's state is still cached.  ``query_x`` is the
-    query stream — served in engine-sized chunks, logits accumulated in
-    arrival order."""
+    set entirely if the first's state is still in either store tier.
+    ``query_x`` is the query stream — served in engine-sized chunks,
+    logits accumulated in arrival order.
+
+    The ``t_*`` timestamps are stamped by the engine from its injectable
+    clock (seconds, monotonic): ``t_enqueue`` at submit, ``t_admit`` when
+    a slot is taken, ``t_adapt`` when the adapted state lands (absent on
+    a state-store hit), ``t_first_logit`` when the first query chunk
+    returns, ``t_done`` at retirement."""
 
     uid: int
     query_x: np.ndarray                          # (M, ...) query stream
@@ -83,6 +113,11 @@ class EpisodicRequest:
     served: int = 0
     cache_hit: Optional[bool] = None             # set at admission
     done: bool = False
+    t_enqueue: Optional[float] = None
+    t_admit: Optional[float] = None
+    t_adapt: Optional[float] = None
+    t_first_logit: Optional[float] = None
+    t_done: Optional[float] = None
 
     @property
     def n_queries(self) -> int:
@@ -99,14 +134,26 @@ class EpisodicRequest:
 
 
 class TaskStateCache:
-    """LRU cache of adapted task states keyed by task uid."""
+    """LRU cache of adapted task states keyed by task uid — the L1 of the
+    two-tier store.
 
-    def __init__(self, capacity: int = 64):
+    Stats contract (well-defined, tested): ``hits``/``misses`` count
+    ``get`` lookups ONLY.  ``put`` on an existing uid is an *overwrite* —
+    it refreshes recency and bumps ``overwrites``, never hits/misses.
+    ``evictions`` counts capacity evictions (never overwrites); each
+    evicted ``(uid, state)`` is handed to ``on_evict`` — the two-tier
+    store's spill path — before being dropped from L1."""
+
+    def __init__(self, capacity: int = 64,
+                 on_evict: Optional[Callable[[int, PyTree], None]] = None):
         if capacity < 1:
             raise ValueError(f"cache capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self.hits = 0
         self.misses = 0
+        self.overwrites = 0
+        self.evictions = 0
+        self._on_evict = on_evict
         self._d: "collections.OrderedDict[int, PyTree]" = \
             collections.OrderedDict()
 
@@ -119,16 +166,101 @@ class TaskStateCache:
         return None
 
     def put(self, uid: int, state: PyTree) -> None:
+        if uid in self._d:
+            self.overwrites += 1
         self._d[uid] = state
         self._d.move_to_end(uid)
         while len(self._d) > self.capacity:
-            self._d.popitem(last=False)
+            old_uid, old_state = self._d.popitem(last=False)
+            self.evictions += 1
+            if self._on_evict is not None:
+                self._on_evict(old_uid, old_state)
 
     def __contains__(self, uid: int) -> bool:
         return uid in self._d
 
     def __len__(self) -> int:
         return len(self._d)
+
+
+class WarmTaskStore:
+    """Disk warm tier for spilled task states: one self-describing npz
+    per uid (atomic tmp + ``os.replace``), written/read through the
+    checkpoint serialization (``save_array_tree``/``load_array_tree``) so
+    a rehydrated state is bit-exact to the spilled one.  The abstract
+    template per uid (shapes/dtypes/treedef — tiny) stays host-side; the
+    arrays live on disk.  Scoped to the engine's lifetime, like the L1."""
+
+    def __init__(self, directory: str | pathlib.Path):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._templates: Dict[int, PyTree] = {}
+
+    def _path(self, uid: int) -> pathlib.Path:
+        return self.dir / f"uid_{uid}.npz"
+
+    def put(self, uid: int, state: PyTree) -> None:
+        tmp = self.dir / f".tmp_uid_{uid}.npz"
+        save_array_tree(tmp, state)
+        os.replace(tmp, self._path(uid))
+        self._templates[uid] = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
+            state)
+
+    def get(self, uid: int) -> Optional[PyTree]:
+        if uid not in self:
+            return None
+        return load_array_tree(self._path(uid), self._templates[uid])
+
+    def __contains__(self, uid: int) -> bool:
+        return uid in self._templates and self._path(uid).exists()
+
+    def __len__(self) -> int:
+        return sum(1 for uid in self._templates if self._path(uid).exists())
+
+
+class TwoTierTaskStore:
+    """L1 LRU of resident task states over an optional disk warm tier.
+
+    ``get`` promotes a warm-tier hit back into L1 (which may spill
+    another state — states cascade, none is silently lost while the warm
+    tier holds it).  ``hits``/``misses`` are the L1's; ``spills`` counts
+    evictions that landed in the warm tier, ``rehydrates`` counts
+    warm-tier loads.  With ``warm_dir=None`` eviction discards (the PR3
+    behavior) and ``rehydrates`` stays 0."""
+
+    def __init__(self, capacity: int = 64,
+                 warm_dir: Optional[str | pathlib.Path] = None):
+        self.warm = WarmTaskStore(warm_dir) if warm_dir is not None else None
+        self.l1 = TaskStateCache(capacity, on_evict=self._spill)
+        self.spills = 0
+        self.rehydrates = 0
+
+    def _spill(self, uid: int, state: PyTree) -> None:
+        if self.warm is not None:
+            self.warm.put(uid, state)
+            self.spills += 1
+
+    def get(self, uid: int) -> Optional[PyTree]:
+        state = self.l1.get(uid)
+        if state is not None:
+            return state
+        if self.warm is not None:
+            state = self.warm.get(uid)
+            if state is not None:
+                self.rehydrates += 1
+                self.l1.put(uid, state)      # promote (may spill another)
+                return state
+        return None
+
+    def put(self, uid: int, state: PyTree) -> None:
+        self.l1.put(uid, state)
+
+    def __contains__(self, uid: int) -> bool:
+        return uid in self.l1 or (self.warm is not None and uid in self.warm)
+
+    def __len__(self) -> int:
+        return len(self.l1)
 
 
 @dataclasses.dataclass
@@ -140,14 +272,17 @@ class _Slot:
 
 class EpisodicServeEngine:
     """Single-host adapt-many-tasks engine over the batched TaskState
-    contract (``learner.adapt_batch`` / ``learner.predict_batch``).
+    contract (``learner.adapt_batch`` / ``learner.predict_batch``) with
+    continuous batching, SLO accounting, and a two-tier state store (see
+    module docstring for the full contract).
 
     ``support_buckets`` are the planned support pad caps
     (:func:`repro.data.episodic.plan_buckets` builds them from a stream
-    histogram); a support set larger than every cap raises, same
-    stale-histogram contract as training-side collation.  All requests
-    must share the learner's ``way`` and one query trailing shape — one
-    engine per model input spec, as with the LM engine.
+    histogram); a support set larger than every cap is rejected at
+    admission with an actionable error, same stale-histogram contract as
+    training-side collation.  All requests must share the learner's
+    ``way`` and one query trailing shape — one engine per model input
+    spec, as with the LM engine.
     """
 
     def __init__(self, learner: MetaLearner, params: PyTree, *,
@@ -155,7 +290,11 @@ class EpisodicServeEngine:
                  query_chunk: int = 8,
                  support_buckets: Sequence[int] = (64,),
                  cache_capacity: int = 64, seed: int = 0,
-                 kernel_backend: Optional[str] = None):
+                 kernel_backend: Optional[str] = None,
+                 clock: Optional[Callable[[], float]] = None,
+                 warm_dir: Optional[str | pathlib.Path] = None,
+                 query_slo_us: Optional[float] = None,
+                 adapt_cost_hint_us: Optional[float] = None):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.learner = learner
@@ -166,7 +305,15 @@ class EpisodicServeEngine:
         self.n_slots = n_slots
         self.query_chunk = query_chunk
         self.support_buckets = tuple(sorted(support_buckets))
-        self.cache = TaskStateCache(cache_capacity)
+        self.store = TwoTierTaskStore(cache_capacity, warm_dir)
+        self.clock = clock if clock is not None else time.monotonic
+        self.query_slo_us = query_slo_us
+        # EWMA of measured adapt-dispatch wall time; zero-duration
+        # observations (a FakeClock that wasn't advanced) are ignored so
+        # scripted tests keep a stable, assertable estimate
+        self._adapt_cost_est_us: Optional[float] = adapt_cost_hint_us
+        self._queue: "collections.deque[EpisodicRequest]" = \
+            collections.deque()
         self._slots: List[Optional[_Slot]] = [None] * n_slots
         self._base_key = jax.random.key(seed)
         # The aggregation-kernel backend (repro.kernels.dispatch) is an
@@ -192,8 +339,11 @@ class EpisodicServeEngine:
         # states are immutable after adaptation, so the (n_slots, ...)
         # predict-side stack is rebuilt only when a slot joins or retires
         self._stacked_states: Optional[tuple] = None
+        self._adapt_lat_us: List[float] = []
+        self._query_lat_us: List[float] = []
         self.tasks_adapted = 0
         self.queries_served = 0
+        self.slo_preemptions = 0
         self.steps = 0
 
     # -- scheduling ----------------------------------------------------------
@@ -204,34 +354,87 @@ class EpisodicServeEngine:
                 return i
         return None
 
-    def add_request(self, req: EpisodicRequest) -> bool:
-        """Admit ``req`` into a free slot; False when all slots are live.
-        A cached state (same uid served before) is attached immediately —
-        the request never enters the adaptation batch.
+    def submit(self, req: EpisodicRequest) -> None:
+        """Enqueue ``req`` (stamps ``t_enqueue``); admission happens FIFO
+        inside ``step`` as slots free up — the continuous-batching entry
+        point."""
+        if req.t_enqueue is None:
+            req.t_enqueue = self.clock()
+        self._queue.append(req)
 
-        A support-less request whose uid is not cached YET but is live in
-        another slot (its first visit is still in flight) is deferred
-        (False — re-offer after a step lands the state); the same request
-        with no in-flight producer either is an error, since nothing will
-        ever cache its state."""
-        slot = self._free_slot()
-        if slot is None:
+    def add_request(self, req: EpisodicRequest) -> bool:
+        """Immediate-admission compatibility path: try to place ``req`` in
+        a free slot right now; False when all slots are live or the uid is
+        already live (re-offer after a step).  ``submit`` + ``step`` is
+        the production path."""
+        if req.t_enqueue is None:
+            req.t_enqueue = self.clock()
+        return self._try_admit(req)
+
+    def _try_admit(self, req: EpisodicRequest) -> bool:
+        """Admit ``req`` into a free slot.  False defers (no free slot, or
+        its uid is already live — the state in flight will be shared, one
+        uid is never adapted twice concurrently).  A support-less request
+        whose uid is in neither store tier is an error — nothing will
+        ever produce its state; a support set exceeding every planned
+        bucket is an error at admission, not at dispatch."""
+        if self._free_slot() is None:
             return False
         if req.way != self.learner.cfg.way:
             raise ValueError(f"request way={req.way} != learner way="
                              f"{self.learner.cfg.way}")
-        if req.support_x is None and req.uid not in self.cache:
-            if any(s is not None and s.req.uid == req.uid
-                   for s in self._slots):
-                return False
+        if any(s is not None and s.req.uid == req.uid for s in self._slots):
+            return False
+        if req.support_x is not None:
+            n = int(np.asarray(req.support_x).shape[0])
+            if n > self.support_buckets[-1]:
+                raise ValueError(
+                    f"request uid={req.uid}: support size {n} exceeds every "
+                    f"planned bucket {self.support_buckets}; re-plan buckets "
+                    f"from a fresh stream histogram")
+        elif req.uid not in self.store:
             raise ValueError(f"request uid={req.uid}: no cached task state "
                              f"and no support set to adapt on")
-        state = self.cache.get(req.uid)
+        state = self.store.get(req.uid)
         req.cache_hit = state is not None
-        self._slots[slot] = _Slot(
+        req.t_admit = self.clock()
+        self._slots[self._free_slot()] = _Slot(
             req=req, state=state,
             stream=iter_query_chunks(req.query_x, self.query_chunk))
         return True
+
+    def _admit_from_queue(self) -> None:
+        """FIFO admission with head-of-line order (matching the PR3
+        run_to_completion loop): the queue head is admitted or everyone
+        waits — deterministic, no reordering."""
+        while self._queue and self._try_admit(self._queue[0]):
+            self._queue.popleft()
+
+    def _earliest_query_deadline_us(self) -> Optional[float]:
+        """Earliest SLO deadline over live ADAPTED lanes with queries
+        still to serve — the lanes a deferred adapt wave would actually
+        help.  Lanes awaiting adaptation are excluded: adaptation is
+        their prerequisite, deferring it only hurts them."""
+        if self.query_slo_us is None:
+            return None
+        deadlines = [s.req.t_enqueue * 1e6 + self.query_slo_us
+                     for s in self._slots
+                     if s is not None and s.state is not None]
+        return min(deadlines) if deadlines else None
+
+    def _adapt_wave_preempted(self, now: float) -> bool:
+        """The SLO decision: defer the pending adapt wave iff some live
+        query lane's deadline is still AHEAD but would be missed by
+        waiting out the (estimated) adapt dispatch.  An already-missed
+        deadline never preempts — the SLO is blown either way — so adapt
+        waves cannot be starved by a permanently-late stream."""
+        if self._adapt_cost_est_us is None:
+            return False
+        dmin = self._earliest_query_deadline_us()
+        if dmin is None:
+            return False
+        now_us = now * 1e6
+        return now_us < dmin <= now_us + self._adapt_cost_est_us
 
     # -- the two batched dispatches ------------------------------------------
 
@@ -239,7 +442,7 @@ class EpisodicServeEngine:
         """One adapt_batch dispatch per support-bucket group of slots
         awaiting adaptation, each padded to n_slots task lanes.  A task's
         pad cap is chosen by its OWN support size — never by its
-        co-tenants' — so the adapted (and cached) state is a pure function
+        co-tenants' — so the adapted (and stored) state is a pure function
         of (params, support, uid) and co-scheduling stays bit-exact even
         with several planned buckets."""
         need = [i for i, s in enumerate(self._slots)
@@ -271,24 +474,40 @@ class EpisodicServeEngine:
             batch = collate_task_batch(tasks, support_size=cap, query_size=1)
             keys = jax.vmap(lambda u: task_key(self._base_key, u))(
                 jnp.asarray(uids))
-            states = self._adapt(self.params, batch, keys)
+            t0 = self.clock()
+            states = jax.block_until_ready(
+                self._adapt(self.params, batch, keys))
+            t1 = self.clock()
+            dt_us = (t1 - t0) * 1e6
+            if dt_us > 0:                      # fake clocks may not advance
+                self._adapt_cost_est_us = (
+                    dt_us if self._adapt_cost_est_us is None
+                    else 0.7 * self._adapt_cost_est_us + 0.3 * dt_us)
             for lane, i in enumerate(idxs):
                 st = index_task_state(states, lane)
-                self._slots[i].state = st
-                self.cache.put(self._slots[i].req.uid, st)
+                slot = self._slots[i]
+                slot.state = st
+                slot.req.t_adapt = t1
+                self._adapt_lat_us.append((t1 - slot.req.t_enqueue) * 1e6)
+                self.store.put(slot.req.uid, st)
             self.tasks_adapted += len(idxs)
+
+    def _retire(self, i: int) -> None:
+        r = self._slots[i].req
+        r.done = True
+        r.t_done = self.clock()
+        self._slots[i] = None
 
     def _serve_queries(self) -> int:
         """ONE predict_batch dispatch serving the next query chunk of every
         live task; empty lanes carry a filler state and zero queries."""
         lanes = []                               # (slot_idx, chunk, n_real)
         for i, s in enumerate(self._slots):
-            if s is None:
+            if s is None or s.state is None:     # awaiting (deferred) adapt
                 continue
             item = next(s.stream, None)
             if item is None:                     # stream exhausted (M == 0)
-                s.req.done = True
-                self._slots[i] = None
+                self._retire(i)
                 continue
             chunk, _, n_real = item
             lanes.append((i, chunk, n_real))
@@ -313,21 +532,34 @@ class EpisodicServeEngine:
             self._stacked_states = (cohort, stacked)
         logits = np.asarray(
             self._predict(self.params, stacked, jnp.asarray(qx)))
+        t_out = self.clock()
         served = 0
         for lane, (i, _, n_real) in enumerate(lanes):
             r = self._slots[i].req
             r.logits.append(logits[lane, :n_real])
             r.served += n_real
             served += n_real
+            if r.t_first_logit is None:
+                r.t_first_logit = t_out
+                self._query_lat_us.append((t_out - r.t_enqueue) * 1e6)
             if r.served >= r.n_queries:
-                r.done = True
-                self._slots[i] = None
+                self._retire(i)
         return served
 
     def step(self) -> int:
-        """One engine step: batched adaptation of newly admitted tasks,
-        then one micro-batched query dispatch.  Returns #queries served."""
-        self._adapt_pending()
+        """One engine step: FIFO admission from the queue, then spend the
+        step's dispatches — the pending adapt wave first UNLESS the SLO
+        scheduler preempts it (a live lane's query deadline would be
+        missed waiting out the adapt dispatch), then one micro-batched
+        query dispatch.  Returns #queries served."""
+        self._admit_from_queue()
+        pending_adapt = any(s is not None and s.state is None
+                            for s in self._slots)
+        if pending_adapt:
+            if self._adapt_wave_preempted(self.clock()):
+                self.slo_preemptions += 1
+            else:
+                self._adapt_pending()
         served = self._serve_queries()
         self.queries_served += served
         self.steps += 1
@@ -335,12 +567,11 @@ class EpisodicServeEngine:
 
     def run_to_completion(self, requests: List[EpisodicRequest],
                           max_steps: int = 100000) -> List[EpisodicRequest]:
-        pending = list(requests)
+        for r in requests:
+            self.submit(r)
         steps = 0
-        while (pending or any(s is not None for s in self._slots)) \
+        while (self._queue or any(s is not None for s in self._slots)) \
                 and steps < max_steps:
-            while pending and self.add_request(pending[0]):
-                pending.pop(0)
             self.step()
             steps += 1
         return requests
@@ -348,14 +579,33 @@ class EpisodicServeEngine:
     # -- observability -------------------------------------------------------
 
     def stats(self) -> Dict[str, float]:
-        lookups = self.cache.hits + self.cache.misses
+        """Counters plus exact nearest-rank latency percentiles (µs).
+        ``adapt_p*_us`` is enqueue → adapted state ready (cold requests
+        only); ``query_p*_us`` is enqueue → first logit; both computed
+        from the injected clock.  ``cache_*``/``hit_rate`` are the L1's;
+        ``spills``/``rehydrates`` count warm-tier traffic."""
+        l1 = self.store.l1
+        lookups = l1.hits + l1.misses
         return dict(
             tasks_adapted=self.tasks_adapted,
             queries_served=self.queries_served,
             steps=self.steps,
-            cache_hits=self.cache.hits,
-            cache_misses=self.cache.misses,
-            hit_rate=self.cache.hits / lookups if lookups else 0.0,
+            queue_depth=len(self._queue),
+            cache_hits=l1.hits,
+            cache_misses=l1.misses,
+            hit_rate=l1.hits / lookups if lookups else 0.0,
+            evictions=l1.evictions,
+            overwrites=l1.overwrites,
+            spills=self.store.spills,
+            rehydrates=self.store.rehydrates,
+            slo_preemptions=self.slo_preemptions,
+            adapt_cost_est_us=(self._adapt_cost_est_us
+                               if self._adapt_cost_est_us is not None
+                               else 0.0),
+            adapt_p50_us=_pctl(self._adapt_lat_us, 50),
+            adapt_p99_us=_pctl(self._adapt_lat_us, 99),
+            query_p50_us=_pctl(self._query_lat_us, 50),
+            query_p99_us=_pctl(self._query_lat_us, 99),
             adapt_compiles=self._adapt.compile_count,
             predict_compiles=self._predict.compile_count,
         )

@@ -10,6 +10,12 @@ exactly this) invisible to resume.
 Restore takes an abstract template (``jax.eval_shape`` of the init) so the
 pytree structure, dtypes, and shardings are re-imposed — restart is
 bit-exact because the train step is a pure function of (state, batch).
+
+The flatten/encode machinery is also exported standalone
+(:func:`save_array_tree` / :func:`load_array_tree`: one self-describing
+npz per pytree) — the serving tier's warm task-state store spills evicted
+adapted states through it, so a rehydrated state is bit-exact to the
+originally adapted one by the same argument as restart exactness.
 """
 from __future__ import annotations
 
@@ -46,6 +52,61 @@ def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:
     return out
 
 
+def encode_array_tree(tree: PyTree) -> Tuple[Dict[str, np.ndarray],
+                                             Dict[str, str]]:
+    """Path-keyed flat numpy arrays plus a dtype sidecar (bfloat16 leaves
+    stored as uint16 views — numpy has no bf16).  The shared encode half of
+    every on-disk pytree in this repo: step checkpoints (meta.json carries
+    the sidecar) and the serving warm tier (the sidecar rides inside the
+    npz, see :func:`save_array_tree`)."""
+    flat = _flatten(tree)
+    arrays: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
+    for k, v in flat.items():
+        if v.dtype == jnp.bfloat16:
+            dtypes[k] = _BF16
+            arrays[k] = v.view(np.uint16)
+        else:
+            dtypes[k] = str(v.dtype)
+            arrays[k] = v
+    return arrays, dtypes
+
+
+def _decode_array(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    return arr.view(jnp.bfloat16) if dtype_str == _BF16 else arr
+
+
+def save_array_tree(file, tree: PyTree) -> None:
+    """One self-describing npz: path-keyed leaves + a ``__dtypes__`` json
+    member, fsynced before return.  Atomicity (tmp + ``os.replace``) is the
+    caller's job.  Values roundtrip bit-exactly through
+    :func:`load_array_tree` (fp arrays are stored verbatim; bf16 via uint16
+    views)."""
+    arrays, dtypes = encode_array_tree(tree)
+    with open(file, "wb") as f:
+        np.savez(f, __dtypes__=np.asarray(json.dumps(dtypes)), **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def load_array_tree(file, template: PyTree) -> PyTree:
+    """Rebuild a :func:`save_array_tree` npz against an abstract template
+    (``jax.eval_shape``-style): structure and dtypes are re-imposed from
+    the template, bit-exact for matching dtypes — the same contract as
+    :meth:`CheckpointManager.restore`."""
+    data = np.load(file)
+    dtypes = json.loads(str(data["__dtypes__"]))
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves_with_path:
+        k = _path_str(path)
+        arr = _decode_array(data[k], dtypes.get(k, ""))
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out)
+
+
 class CheckpointManager:
     def __init__(self, directory: str | pathlib.Path, keep: int = 3):
         self.dir = pathlib.Path(directory)
@@ -61,16 +122,7 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         tmp.mkdir(parents=True)
 
-        flat = _flatten(state)
-        dtypes = {}
-        arrays = {}
-        for k, v in flat.items():
-            if v.dtype == jnp.bfloat16:
-                dtypes[k] = _BF16
-                arrays[k] = v.view(np.uint16)
-            else:
-                dtypes[k] = str(v.dtype)
-                arrays[k] = v
+        arrays, dtypes = encode_array_tree(state)
         with open(tmp / "state.npz", "wb") as f:
             np.savez(f, **arrays)
             f.flush()
@@ -116,9 +168,7 @@ class CheckpointManager:
         out = []
         for (path, leaf), sh in zip(leaves_with_path, flat_shard):
             k = _path_str(path)
-            arr = data[k]
-            if meta["dtypes"].get(k) == _BF16:
-                arr = arr.view(jnp.bfloat16)
+            arr = _decode_array(data[k], meta["dtypes"].get(k, ""))
             arr = arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr
             if sh is not None:
                 out.append(jax.device_put(arr, sh))

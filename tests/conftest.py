@@ -11,6 +11,51 @@ def key():
     return jax.random.key(0)
 
 
+class FakeClock:
+    """Deterministic monotonic clock for the serving tests: injectable
+    into ``EpisodicServeEngine(clock=...)``, advanced ONLY by the test.
+    Calling it returns the current virtual time in seconds (the same
+    contract as ``time.monotonic``), so latency percentiles, SLO
+    preemption decisions, and timestamp stamping are exact — no sleeps,
+    no wall-clock noise."""
+
+    def __init__(self, start: float = 0.0):
+        self.t = float(start)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"FakeClock is monotonic; advance({dt})")
+        self.t += dt
+        return self.t
+
+    def advance_to(self, t: float) -> float:
+        if t < self.t:
+            raise ValueError(f"FakeClock is monotonic; advance_to({t}) "
+                             f"from {self.t}")
+        self.t = float(t)
+        return self.t
+
+
+def scripted_stream(arrivals, clock: FakeClock):
+    """Scripted-arrival request stream: ``arrivals`` is a sequence of
+    ``(t_virtual_seconds, request)`` pairs.  Yields each request after
+    advancing ``clock`` to its arrival time (stable order for equal
+    times), so ``engine.submit(req)`` stamps exactly the scripted
+    ``t_enqueue`` — the generator half of the deterministic serving
+    harness."""
+    for t, req in sorted(arrivals, key=lambda a: a[0]):
+        clock.advance_to(t)
+        yield req
+
+
+@pytest.fixture
+def fake_clock():
+    return FakeClock()
+
+
 def make_pretrained_stub_backbone(image_size: int = 16, channels: int = 3,
                                   feature_dim: int = 32, seed: int = 7,
                                   noise_gain: float = 2.0):

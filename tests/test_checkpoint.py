@@ -95,3 +95,30 @@ def test_straggler_monitor_flags_outliers():
     assert mon.observe(2, 10.0)          # 10x the EWMA -> flagged
     assert mon.flagged == [2]
     assert not mon.observe(3, 1.0)       # EWMA not poisoned by the spike
+
+
+def test_save_load_array_tree_roundtrip_bitexact(tmp_path, key):
+    """The standalone npz pytree serialization (the warm task-state
+    tier's substrate) roundtrips bit-exactly, including bf16 leaves
+    (uint16 views) and integer leaves, against an abstract template."""
+    from repro.train.checkpoint import load_array_tree, save_array_tree
+    tree = dict(
+        w=jax.random.normal(key, (5, 3)),
+        nested=dict(b=jnp.arange(4, dtype=jnp.int32),
+                    h=jax.random.normal(jax.random.key(1), (2, 2)
+                                        ).astype(jnp.bfloat16)),
+        scale=jnp.float32(0.5),
+    )
+    f = tmp_path / "tree.npz"
+    save_array_tree(f, tree)
+    template = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), a.dtype), tree)
+    back = load_array_tree(f, template)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32) if a.dtype == jnp.bfloat16
+            else np.asarray(a),
+            np.asarray(b, np.float32) if b.dtype == jnp.bfloat16
+            else np.asarray(b))

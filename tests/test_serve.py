@@ -312,7 +312,9 @@ def test_padding_never_changes_adapted_state(kind, key):
     s2 = lr.adapt_batch(params, collate_task_batch(tasks, support_size=24,
                                                    query_size=6),
                         keys, SERVE_LITE)
-    tol = 0.0 if kind != "simple_cnaps" else 1e-4
+    # fomaml's inner gradient loop picks up f32 reduction-order noise
+    # across pad widths (same concession as STATE_TOL above)
+    tol = {"protonets": 0.0, "fomaml": 1e-6, "simple_cnaps": 1e-4}[kind]
     assert _max_leaf_diff(s1, s2) <= tol
 
 
@@ -558,3 +560,303 @@ def test_perf_smoke_batched_predict_beats_per_task_loop(key):
             break
     assert max(ratios) > 1.0, \
         f"batched predict never beat the per-task loop: {ratios}"
+
+
+# ---------------------------------------------------------------------------
+# production serving: deterministic harness, SLO scheduling, two-tier store
+# ---------------------------------------------------------------------------
+
+from conftest import FakeClock, scripted_stream  # noqa: E402
+from repro.serve.episodic import TwoTierTaskStore, WarmTaskStore  # noqa: E402
+
+
+@pytest.mark.serve
+def test_task_state_cache_overwrite_and_eviction_stats():
+    """The stats contract: hits/misses count ``get`` only; ``put`` on an
+    existing uid is an overwrite (recency refresh, ``overwrites`` bumped,
+    hits/misses untouched); capacity evictions bump ``evictions`` and
+    hand (uid, state) to ``on_evict``."""
+    spilled = []
+    c = TaskStateCache(capacity=2, on_evict=lambda u, s: spilled.append((u, s)))
+    c.put(1, "a")
+    c.put(1, "a2")                       # overwrite: not a hit, not a miss
+    assert (c.hits, c.misses, c.overwrites, c.evictions) == (0, 0, 1, 0)
+    assert len(c) == 1 and c.get(1) == "a2"
+    c.put(2, "b")
+    c.put(1, "a3")                       # overwrite refreshes recency too
+    c.put(3, "c")                        # evicts 2 (LRU), not 1
+    assert (c.hits, c.misses, c.overwrites, c.evictions) == (1, 0, 2, 1)
+    assert spilled == [(2, "b")]
+    assert 2 not in c and 1 in c and 3 in c
+    assert c.get(2) is None
+    assert (c.hits, c.misses) == (1, 1)
+
+
+@pytest.mark.serve
+@pytest.mark.parametrize("kind", KINDS)
+def test_spill_rehydrate_roundtrip_bitexact(kind, key, tmp_path):
+    """adapted state -> evict -> spill -> rehydrate is BIT-exact for every
+    learner kind (the per-kind parity table): the warm tier writes through
+    the checkpoint serialization, so fp arrays roundtrip verbatim."""
+    lr = _learner(kind)
+    params = lr.init(key)
+    t0, t1 = _tasks(2, shot=3)
+    st0 = lr.adapt(params, t0.support_x, t0.support_y, key=task_key(key, 0),
+                   lite=SERVE_LITE)
+    st1 = lr.adapt(params, t1.support_x, t1.support_y, key=task_key(key, 1),
+                   lite=SERVE_LITE)
+    store = TwoTierTaskStore(capacity=1, warm_dir=tmp_path)
+    store.put(0, st0)
+    store.put(1, st1)                    # capacity 1: spills uid 0 to disk
+    assert store.spills == 1 and len(store.l1) == 1
+    back = store.get(0)                  # L1 miss -> warm-tier rehydrate
+    assert store.rehydrates == 1
+    assert jax.tree.structure(back) == jax.tree.structure(st0)
+    for a, b in zip(jax.tree.leaves(st0), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+    assert _max_leaf_diff(st0, back) == 0.0, kind
+    # promotion cascaded uid 1 out of the capacity-1 L1 — spilled, not lost
+    assert store.spills == 2
+    assert _max_leaf_diff(st1, store.get(1)) == 0.0, kind
+
+
+@pytest.mark.serve
+@pytest.mark.parametrize("kind", KINDS)
+def test_capacity1_thrash_rehydrates_bitexact(kind, key, tmp_path):
+    """Cache-capacity-1 thrash with repeat uids: repeats are served by
+    warm-tier rehydration (never re-adapted) and their logits are
+    bit-exact to solo serving — the acceptance criterion, per kind."""
+    lr = _learner(kind)
+    params = lr.init(key)
+    tasks = _tasks(2, shot=3)
+
+    def engine():
+        return EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=1,
+                                   query_chunk=4, support_buckets=(16,),
+                                   cache_capacity=1, warm_dir=tmp_path / kind)
+
+    solo = [None, None]
+    for u in (0, 1):
+        e = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=1,
+                                query_chunk=4, support_buckets=(16,),
+                                cache_capacity=1)
+        solo[u] = _requests([tasks[u]], uids=[u])[0]
+        e.run_to_completion([solo[u]])
+
+    eng = engine()
+    cold = _requests(tasks)
+    eng.run_to_completion(cold)          # serving uid 1 spills uid 0
+    s = eng.stats()
+    assert s["tasks_adapted"] == 2 and s["spills"] >= 1
+
+    warm_compiles = (s["adapt_compiles"], s["predict_compiles"])
+    repeats = [EpisodicRequest(uid=u, query_x=np.asarray(tasks[u].query_x),
+                               way=WAY) for u in (0, 1, 0)]
+    eng.run_to_completion(repeats)
+    s = eng.stats()
+    assert s["tasks_adapted"] == 2       # NEVER re-adapted
+    assert s["rehydrates"] >= 2          # thrash served from the warm tier
+    # rehydrated avals are identical -> the compiled dispatches are reused
+    assert (s["adapt_compiles"], s["predict_compiles"]) == warm_compiles
+    assert all(r.done and r.cache_hit for r in repeats)
+    for r in repeats:
+        np.testing.assert_array_equal(r.all_logits(),
+                                      solo[r.uid].all_logits(),
+                                      err_msg=f"{kind} uid={r.uid}")
+
+
+@pytest.mark.serve
+def test_rehydrate_keeps_compile_counters_flat(key, tmp_path):
+    """A rehydrated state has identical avals to the originally adapted
+    one, so the compiled predict dispatch is REUSED — no reshape from the
+    warm tier (compile counters flat across the whole thrash)."""
+    lr = _learner("protonets")
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=1,
+                              query_chunk=4, support_buckets=(16,),
+                              cache_capacity=1, warm_dir=tmp_path)
+    tasks = _tasks(3, shot=3)
+    eng.run_to_completion(_requests(tasks))
+    warm_counts = (eng.stats()["adapt_compiles"],
+                   eng.stats()["predict_compiles"])
+    repeats = [EpisodicRequest(uid=u, query_x=np.asarray(tasks[u].query_x),
+                               way=WAY) for u in (0, 1, 2, 0)]
+    eng.run_to_completion(repeats)
+    s = eng.stats()
+    assert s["rehydrates"] >= 3
+    assert (s["adapt_compiles"], s["predict_compiles"]) == warm_counts
+    assert all(r.done for r in repeats)
+
+
+@pytest.mark.serve
+def test_same_uid_same_wave_never_double_adapts(key):
+    """Two same-uid requests (both carrying supports) offered in one wave:
+    the second defers until the first's state lands, then shares it —
+    tasks_adapted stays 1 and both streams get identical logits."""
+    lr = _learner("protonets")
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=4,
+                              query_chunk=4, support_buckets=(16,))
+    t = _tasks(1)[0]
+    a, b = _requests([t, t], uids=[7, 7])
+    eng.run_to_completion([a, b])
+    assert a.done and b.done
+    assert eng.stats()["tasks_adapted"] == 1
+    assert b.cache_hit
+    np.testing.assert_array_equal(a.all_logits(), b.all_logits())
+
+
+@pytest.mark.serve
+def test_oversized_support_is_actionable_admission_error(key):
+    """A support set exceeding every planned bucket is rejected AT
+    ADMISSION, naming the uid and the caps (stale-histogram contract) —
+    not at dispatch time, and never a silent new compiled shape."""
+    lr = _learner("protonets")
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=2,
+                              query_chunk=4, support_buckets=(8, 16))
+    big = _requests(_tasks(1, shot=6))[0]          # 3-way x 6 = 18 > 16
+    with pytest.raises(ValueError, match=r"uid=0.*exceeds every planned "
+                                         r"bucket.*re-plan"):
+        eng.add_request(big)
+    # the queued path surfaces the same error from step()
+    eng.submit(_requests(_tasks(1, shot=6), uids=[3])[0])
+    with pytest.raises(ValueError, match="uid=3"):
+        eng.step()
+
+
+@pytest.mark.serve
+def test_empty_query_stream_completes_without_predict_dispatch(key):
+    """An empty query_x stream: the request adapts (its state is cached
+    for later visits), completes, and the engine never compiles or
+    dispatches predict_batch at all."""
+    lr = _learner("protonets")
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=2,
+                              query_chunk=4, support_buckets=(16,))
+    r = _requests(_tasks(1))[0]
+    r.query_x = np.asarray(r.query_x)[:0]
+    eng.run_to_completion([r])
+    assert r.done and r.all_logits().shape == (0, WAY)
+    s = eng.stats()
+    assert s["tasks_adapted"] == 1 and s["queries_served"] == 0
+    assert s["predict_compiles"] == 0
+    assert r.t_done is not None and r.t_first_logit is None
+
+
+@pytest.mark.serve
+def test_fake_clock_latency_percentiles_exact(key, fake_clock):
+    """Latency accounting against a scripted arrival stream: nearest-rank
+    p50/p99 adapt and query latencies computed from the injected clock
+    are asserted EXACTLY (virtual seconds chosen to be float-exact)."""
+    lr = _learner("protonets")
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=2,
+                              query_chunk=4, support_buckets=(16,),
+                              clock=fake_clock)
+    a, b = _requests(_tasks(2))
+    stream = scripted_stream([(1.0, a), (3.0, b)], fake_clock)
+    for req in stream:
+        eng.submit(req)
+    assert (a.t_enqueue, b.t_enqueue) == (1.0, 3.0)
+    assert eng.stats()["queue_depth"] == 2
+    fake_clock.advance_to(5.0)
+    eng.step()                            # both admitted + adapted at t=5
+    s = eng.stats()
+    assert s["queue_depth"] == 0
+    assert (a.t_admit, b.t_admit) == (5.0, 5.0)
+    # adapt latencies (enqueue -> state): a=4s, b=2s; first logits land
+    # the same virtual instant (the clock was not advanced mid-step)
+    assert s["adapt_p50_us"] == 2e6 and s["adapt_p99_us"] == 4e6
+    assert s["query_p50_us"] == 2e6 and s["query_p99_us"] == 4e6
+    fake_clock.advance(1.0)
+    eng.run_to_completion([])
+    assert a.done and b.done
+    assert a.t_done == 6.0 and b.t_done == 6.0
+
+
+@pytest.mark.serve
+def test_slo_preemption_defers_adapt_wave(key, fake_clock):
+    """The SLO scheduler, decision by decision: a pending adapt wave is
+    deferred exactly when a live lane's query deadline is ahead but would
+    be missed waiting out the estimated adapt dispatch; an already-missed
+    deadline no longer preempts (no starvation)."""
+    lr = _learner("protonets")
+    params = lr.init(key)
+    eng = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=2,
+                              query_chunk=2, support_buckets=(16,),
+                              clock=fake_clock,
+                              query_slo_us=1.5e6,       # 1.5 virtual s
+                              adapt_cost_hint_us=1.0e6)  # est. 1 virtual s
+    a, b = _requests(_tasks(2))           # 6 queries each, chunk 2
+    eng.submit(a)
+    eng.step()                            # t=0: no live lanes yet -> adapt
+    assert eng.stats()["tasks_adapted"] == 1 and a.served == 2
+
+    fake_clock.advance_to(0.8)
+    eng.submit(b)
+    eng.step()
+    # b's adapt wave would land at ~0.8+1.0 = 1.8s > a's deadline 1.5s,
+    # which is still ahead -> preempted; a's chunk goes out instead
+    s = eng.stats()
+    assert s["slo_preemptions"] == 1 and s["tasks_adapted"] == 1
+    assert a.served == 4 and b.served == 0 and b.t_adapt is None
+
+    fake_clock.advance_to(1.6)            # a's deadline now missed
+    eng.step()
+    s = eng.stats()
+    assert s["slo_preemptions"] == 1      # missed deadline never preempts
+    assert s["tasks_adapted"] == 2 and b.t_adapt is not None
+    assert a.served == 6 and a.done
+    eng.run_to_completion([])
+    assert b.done
+    # control: without an SLO the same schedule never defers
+    eng2 = EpisodicServeEngine(lr, params, lite=SERVE_LITE, n_slots=2,
+                               query_chunk=2, support_buckets=(16,),
+                               clock=FakeClock(),
+                               adapt_cost_hint_us=1.0e6)
+    a2, b2 = _requests(_tasks(2))
+    eng2.submit(a2)
+    eng2.step()
+    eng2.submit(b2)
+    eng2.step()
+    assert eng2.stats()["slo_preemptions"] == 0
+    assert eng2.stats()["tasks_adapted"] == 2
+
+
+@pytest.mark.serve
+def test_perf_smoke_rehydrate_cheaper_than_readapt_fomaml(key, tmp_path):
+    """Tier-1 perf smoke: warm-tier rehydration must be measurably
+    cheaper than re-adaptation for fomaml — the expensive re-adapt tail
+    (per table1_adaptation_cost.csv) that the two-tier store exists to
+    avoid.  3 attempts guard against scheduler noise on the shared CPU."""
+    lr = make_learner(MetaLearnerConfig(kind="fomaml", way=WAY,
+                                        inner_steps=20), BB, SET_CFG)
+    params = lr.init(key)
+    t = _tasks(1, shot=4)[0]
+    adapt_j = jax.jit(lambda p, sx, sy, k: lr.adapt(p, sx, sy, key=k,
+                                                    lite=SERVE_LITE))
+    k0 = task_key(key, 0)
+    st = jax.block_until_ready(adapt_j(params, t.support_x, t.support_y, k0))
+    warm = WarmTaskStore(tmp_path)
+    warm.put(0, st)
+    jax.block_until_ready(warm.get(0))   # warm the IO path/page cache
+
+    ratios = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(adapt_j(params, t.support_x, t.support_y,
+                                          k0))
+        t_readapt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(warm.get(0))
+        t_rehydrate = time.perf_counter() - t0
+        ratios.append(t_readapt / t_rehydrate)
+        if ratios[-1] > 1.0:
+            break
+    assert max(ratios) > 1.0, \
+        f"rehydrate never beat fomaml re-adaptation: {ratios}"
+    # and it really is the same state, bit for bit
+    assert _max_leaf_diff(st, warm.get(0)) == 0.0
