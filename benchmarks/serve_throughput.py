@@ -90,7 +90,10 @@ def main() -> None:
                     query_p50_us=r.get("query_p50_us", ""),
                     query_p99_us=r.get("query_p99_us", ""),
                     adapt_compiles=r.get("adapt_compiles", ""),
-                    predict_compiles=r.get("predict_compiles", ""))
+                    predict_compiles=r.get("predict_compiles", ""),
+                    quarantined=r.get("quarantined", ""),
+                    rejections=r.get("rejections", ""),
+                    deadline_abandoned=r.get("deadline_abandoned", ""))
 
     rows = []
 
@@ -192,6 +195,9 @@ def main() -> None:
         hit_rate=round(s_cold["hit_rate"], 3),
         adapt_compiles=s_cold["adapt_compiles"],
         predict_compiles=s_cold["predict_compiles"],
+        quarantined=int(s_cold["quarantined"]),
+        rejections=int(s_cold["rejections"]),
+        deadline_abandoned=int(s_cold["deadline_abandoned"]),
         **wave_pctls(cold))))
     rows.append(blank(dict(
         mode="engine_warm", tasks=n_req,
@@ -202,6 +208,9 @@ def main() -> None:
             max(n_req, 1), 3),
         adapt_compiles=s_warm["adapt_compiles"],
         predict_compiles=s_warm["predict_compiles"],
+        quarantined=int(s_warm["quarantined"]),
+        rejections=int(s_warm["rejections"]),
+        deadline_abandoned=int(s_warm["deadline_abandoned"]),
         **wave_pctls(warm))))
 
     # -- warm-tier rehydrate vs re-adaptation (fomaml: the expensive tail) ---

@@ -172,6 +172,11 @@ class MetaTrainConfig:
       (pallas on TPU else ref), or 'naive' (the materializing legacy
       composite, bit-exact with the pre-dispatch code).  The episodic
       train-step adapter binds it at trace time.
+    skip_nonfinite: arm the non-finite-update guard in the step — a
+      NaN/inf gradient suppresses the optimizer update bit-exactly (a
+      fused where-select; metrics['nonfinite'] reports it) instead of
+      corrupting params; the fault-tolerant loop bounds how many
+      consecutive skips count as divergence and rolls back.
     """
 
     tasks_per_step: int = 8
@@ -190,6 +195,7 @@ class MetaTrainConfig:
     prefetch: int = 2
     donate: bool = True
     kernel_backend: str = "ref"
+    skip_nonfinite: bool = True
 
     def __post_init__(self):
         # fail at CONFIG time, not at trace time deep inside shard_map

@@ -140,6 +140,17 @@ def make_batched_meta_grads(learner: MetaLearner, lite: LiteSpec) -> Callable:
     return grads_fn
 
 
+def _tree_all_finite(tree: PyTree) -> jnp.ndarray:
+    """Scalar bool: every element of every leaf is finite.  One fused
+    check inside the step's jit — the guard the fault-tolerant loop relies
+    on to turn a NaN/inf gradient into a skipped step instead of silent
+    parameter corruption."""
+    ok = jnp.asarray(True)
+    for leaf in jax.tree.leaves(tree):
+        ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(leaf)))
+    return ok
+
+
 def init_ef_state(params: PyTree, dcn_shards: int) -> PyTree:
     """Zero error-feedback residuals for ``grad_reduce='compressed'``: one
     fp32 residual copy per DCN shard (leading axis ``dcn_shards``, sharded
@@ -184,7 +195,8 @@ def make_batched_meta_train_step(learner: MetaLearner, lite: LiteSpec,
                                  mesh=None, dp_axis: str = "data",
                                  dcn_axis: str = "dcn",
                                  grad_reduce: str = "pmean",
-                                 accum_steps: int = 1) -> Callable:
+                                 accum_steps: int = 1,
+                                 skip_nonfinite: bool = True) -> Callable:
     """Task-batched meta-training step: T tasks -> ONE AdamW step.
 
         step(params, opt_state, batch: TaskBatch, key)
@@ -216,17 +228,35 @@ def make_batched_meta_train_step(learner: MetaLearner, lite: LiteSpec,
     overrides the constant ``lr``; the step index is the optimizer-state
     update count, so schedules survive checkpoint resume for free.
     Metrics report the lr actually applied.
+
+    ``skip_nonfinite`` (default on) arms the non-finite-update guard: if
+    any gradient element is NaN/inf the optimizer update is suppressed by
+    a ``where``-select — params and opt state (count included) come out
+    BIT-IDENTICAL to the inputs — and ``metrics['nonfinite']`` is 1.0.
+    The select keeps the step a single fixed computation graph (no
+    recompile, donation-safe); the fault-tolerant loop turns runs of
+    skipped steps into a divergence rollback.  On a two-level mesh the
+    verdict is computed on the fp32 gradients BEFORE the (possibly int8
+    compressed) DCN reduction and ``pmin``-reduced across hosts, so every
+    shard takes the same branch and quantized NaN garbage can never pass
+    the check; the compressed path's error-feedback residual is frozen on
+    skipped steps by the same select.
     """
     grads_fn = make_batched_meta_grads(learner, lite)
 
-    def apply_update(params, opt_state, loss, acc, grads):
+    def apply_update(params, opt_state, loss, acc, grads, ok=None):
         grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
         lr_t = lr if schedule is None else schedule(opt_state["count"])
-        params, opt_state = adamw_update(params, grads, opt_state, lr_t,
-                                         adamw)
-        return params, opt_state, dict(loss=loss, accuracy=acc,
-                                       grad_norm=gnorm,
-                                       lr=jnp.asarray(lr_t, jnp.float32))
+        new_params, new_opt = adamw_update(params, grads, opt_state, lr_t,
+                                           adamw)
+        metrics = dict(loss=loss, accuracy=acc, grad_norm=gnorm,
+                       lr=jnp.asarray(lr_t, jnp.float32))
+        if ok is not None:
+            pick = lambda n, o: jnp.where(ok, n, o)  # noqa: E731
+            new_params = jax.tree.map(pick, new_params, params)
+            new_opt = jax.tree.map(pick, new_opt, opt_state)
+            metrics["nonfinite"] = (~ok).astype(jnp.float32)
+        return new_params, new_opt, metrics
 
     if grad_reduce not in ("pmean", "compressed"):
         raise ValueError(f"grad_reduce={grad_reduce!r} (want 'pmean' or "
@@ -256,7 +286,8 @@ def make_batched_meta_train_step(learner: MetaLearner, lite: LiteSpec,
             ids = jnp.arange(batch.num_tasks)
             loss, acc, grads = _accumulated_grads(grads_fn, params, batch,
                                                   key, ids, accum_steps)
-            return apply_update(params, opt_state, loss, acc, grads)
+            ok = _tree_all_finite(grads) if skip_nonfinite else None
+            return apply_update(params, opt_state, loss, acc, grads, ok)
 
         return step
 
@@ -278,17 +309,26 @@ def make_batched_meta_train_step(learner: MetaLearner, lite: LiteSpec,
         loss = jax.lax.pmean(loss, dp_axis)
         acc = jax.lax.pmean(acc, dp_axis)
         grads = jax.lax.pmean(grads, dp_axis)
+        # finite verdict on the exact fp32 grads BEFORE any dcn compression
+        # (int8-quantized NaN can decode to finite garbage); pmin over dcn
+        # replicates the decision so every host skips or applies together.
+        ok = _tree_all_finite(grads) if skip_nonfinite else None
         if two_level:
             loss = jax.lax.pmean(loss, dcn_axis)
             acc = jax.lax.pmean(acc, dcn_axis)
+            if ok is not None:
+                ok = jax.lax.pmin(ok.astype(jnp.int32), dcn_axis).astype(bool)
             if compressed:
                 ef = jax.tree.map(lambda e: e[0], maybe_ef[0])
                 summed, new_ef = compressed_psum(grads, dcn_axis, ef)
                 grads = jax.tree.map(lambda g: g / dcn, summed)
+                if ok is not None:
+                    new_ef = jax.tree.map(
+                        lambda n, o: jnp.where(ok, n, o), new_ef, ef)
                 new_ef = jax.tree.map(lambda e: e[None], new_ef)
             else:
                 grads = jax.lax.pmean(grads, dcn_axis)
-        out = apply_update(params, opt_state, loss, acc, grads)
+        out = apply_update(params, opt_state, loss, acc, grads, ok)
         return out + ((new_ef,) if compressed else ())
 
     def step(params: PyTree, opt_state: Dict, batch: TaskBatch, key

@@ -1,0 +1,63 @@
+"""Fault-injection + fault-tolerance subsystem (the robustness layer).
+
+Two halves:
+
+* :mod:`repro.faults.plan` — seeded, deterministic fault *injection*: a
+  :class:`FaultPlan` of ``(site, at, kind)`` triggers that the train loop,
+  ``Prefetcher``, ``CheckpointManager``, ``WarmTaskStore``, and
+  ``EpisodicServeEngine`` accept the same way the serving tests inject a
+  ``FakeClock``.  Every survivable failure mode has a repeatable test.
+* The *tolerance* lives in the components themselves: the non-finite
+  gradient guard + divergence rollback in the train step/loop, bounded
+  retry in the prefetcher, crash-consistent checkpoints, warm-tier
+  checksums + quarantine, bounded-queue backpressure and deadline
+  abandonment in the serve engine.  See ROADMAP.md "Fault-tolerance
+  contract" for which faults are survivable at which layer and which
+  counters report them.
+
+:class:`PreemptionSignal` is the production half of the graceful-preemption
+path: the launcher installs it on SIGTERM, the loop flushes a checkpoint
+and exits resumable (same code path a ``train.preempt`` fault triggers).
+"""
+from __future__ import annotations
+
+import signal as _signal
+from typing import Optional, Sequence
+
+from repro.faults.plan import (ALL_SITES, CKPT_PRE_COMMIT, CKPT_PRE_REPLACE,
+                               DATA_NAN, DATA_TRANSIENT, TRAIN_PREEMPT,
+                               TRAIN_STRAGGLER, WARM_CORRUPT, WARM_VANISH,
+                               FaultPlan, FaultSpec, InjectedKill,
+                               TransientDataError, advance_clock)
+
+__all__ = [
+    "ALL_SITES", "CKPT_PRE_COMMIT", "CKPT_PRE_REPLACE", "DATA_NAN",
+    "DATA_TRANSIENT", "TRAIN_PREEMPT", "TRAIN_STRAGGLER", "WARM_CORRUPT",
+    "WARM_VANISH", "FaultPlan", "FaultSpec", "InjectedKill",
+    "TransientDataError", "advance_clock", "PreemptionSignal",
+]
+
+
+class PreemptionSignal:
+    """Cooperative preemption flag for the training loop.
+
+    The loop polls ``requested`` at each step boundary; once set it flushes
+    a checkpoint at the current step and raises ``PreemptedError`` —
+    nonzero-but-resumable, and resume is bit-exact because the step is a
+    pure function of (state, batch) and ``batch_at`` is pure in the step.
+
+    ``install()`` registers the flag on real signals (SIGTERM by default —
+    what a preemptible/budgeted scheduler sends); tests just call
+    ``request()`` directly or let a ``train.preempt`` fault fire."""
+
+    def __init__(self):
+        self.requested = False
+
+    def request(self, *_args) -> None:
+        self.requested = True
+
+    def install(self, signals: Optional[Sequence[int]] = None
+                ) -> "PreemptionSignal":
+        for sig in (signals if signals is not None else (_signal.SIGTERM,)):
+            _signal.signal(sig, self.request)
+        return self

@@ -1,0 +1,183 @@
+"""Deterministic fault-injection plans.
+
+A :class:`FaultPlan` is the fault analogue of the serving harness's
+``FakeClock``: a seeded, fully deterministic schedule of faults that the
+fault-tolerant components accept by injection (``train(fault_plan=...)``,
+``CheckpointManager(fault_plan=...)``, ``WarmTaskStore(fault_plan=...)``,
+``EpisodicServeEngine(fault_plan=...)``).  Every failure mode the stack
+claims to survive is expressed as a :class:`FaultSpec` trigger
+``(site, at, kind)`` so the failure reproduces bit-for-bit in a test —
+no monkeypatching, no flaky timing, no real signals.
+
+Sites (the injection points wired through the stack):
+
+==========================  ================================================
+``data.nan``                poison the step's batch with NaNs (every float
+                            leaf) — drives the non-finite-gradient guard
+``data.transient``          raise :class:`TransientDataError` from
+                            ``batch_at`` — drives prefetcher/loop retry
+``train.preempt``           graceful preemption at a step: the loop flushes
+                            a checkpoint and raises ``PreemptedError``
+``train.straggler``         make a step slow by ``payload`` seconds
+                            (advances an injectable clock; no real sleep
+                            under a FakeClock)
+``ckpt.pre_commit``         kill (raise :class:`InjectedKill`) after the
+                            checkpoint tmp write, before the COMMIT marker
+``ckpt.pre_replace``        kill after COMMIT, before the atomic
+                            ``os.replace`` publish
+``warm.corrupt``            truncate a just-spilled warm-tier npz to
+                            ``payload`` bytes (crash-mid-put residue /
+                            bit-rot) — drives quarantine + re-adapt
+``warm.vanish``             remove the warm directory before a spill
+                            (tmpfs cleanup) — drives L1-only degradation
+==========================  ================================================
+
+``at`` is the site's natural index — the step for training sites, the task
+uid for warm-tier sites (``None`` matches any index).  ``count`` bounds how
+many times a spec fires: a transient error with ``count=2`` fails twice and
+then heals, which is exactly what a bounded-retry test needs.  Every firing
+is recorded in ``plan.fired`` for assertions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# canonical site names (plain strings everywhere; these constants are the
+# documented vocabulary)
+DATA_NAN = "data.nan"
+DATA_TRANSIENT = "data.transient"
+TRAIN_PREEMPT = "train.preempt"
+TRAIN_STRAGGLER = "train.straggler"
+CKPT_PRE_COMMIT = "ckpt.pre_commit"
+CKPT_PRE_REPLACE = "ckpt.pre_replace"
+WARM_CORRUPT = "warm.corrupt"
+WARM_VANISH = "warm.vanish"
+
+ALL_SITES = (DATA_NAN, DATA_TRANSIENT, TRAIN_PREEMPT, TRAIN_STRAGGLER,
+             CKPT_PRE_COMMIT, CKPT_PRE_REPLACE, WARM_CORRUPT, WARM_VANISH)
+
+
+class TransientDataError(RuntimeError):
+    """A retryable data-source failure (the injected stand-in for a flaky
+    loader / filesystem / network read)."""
+
+
+class InjectedKill(RuntimeError):
+    """Simulated process death at a precise point (e.g. between a
+    checkpoint's tmp write and its atomic publish).  Tests catch it where
+    a real kill would end the process; everything already on disk is
+    exactly what a real crash would leave behind."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One trigger: fire ``kind`` at ``site`` when the site's index equals
+    ``at`` (``None`` = any index), at most ``count`` times."""
+
+    site: str
+    at: Optional[int] = None
+    kind: str = "error"
+    payload: Any = None
+    count: int = 1
+    remaining: int = dataclasses.field(default=-1)
+
+    def __post_init__(self):
+        if self.remaining < 0:
+            self.remaining = self.count
+
+
+class FaultPlan:
+    """A deterministic schedule of :class:`FaultSpec` triggers.
+
+    ``fire(site, at)`` returns the first matching spec with firings left
+    (decrementing it) or ``None`` — the single primitive every injection
+    point calls.  ``fired`` records ``(site, at, kind)`` per firing so
+    tests assert exactly which faults happened, in order.
+    """
+
+    def __init__(self, specs: Sequence[FaultSpec] = ()):
+        self.specs: List[FaultSpec] = list(specs)
+        self.fired: List[Tuple[str, Optional[int], str]] = []
+
+    @classmethod
+    def single(cls, site: str, at: Optional[int] = None, kind: str = "error",
+               payload: Any = None, count: int = 1) -> "FaultPlan":
+        return cls([FaultSpec(site=site, at=at, kind=kind, payload=payload,
+                              count=count)])
+
+    @classmethod
+    def seeded(cls, seed: int, site: str, num_steps: int, rate: float,
+               kind: str = "error", payload: Any = None,
+               count: int = 1) -> "FaultPlan":
+        """Seeded random plan: each step in ``range(num_steps)`` gets a
+        trigger with probability ``rate`` — the same seed always yields the
+        same schedule (``np.random.default_rng(seed)``), so a soak test is
+        as repeatable as a hand-written one."""
+        rng = np.random.default_rng(seed)
+        steps = np.nonzero(rng.random(num_steps) < rate)[0]
+        return cls([FaultSpec(site=site, at=int(s), kind=kind,
+                              payload=payload, count=count) for s in steps])
+
+    def extend(self, other: "FaultPlan") -> "FaultPlan":
+        """Merge another plan's specs into this one (shared ``fired`` log)."""
+        self.specs.extend(other.specs)
+        return self
+
+    def fire(self, site: str, at: Optional[int] = None) -> Optional[FaultSpec]:
+        for spec in self.specs:
+            if spec.site != site or spec.remaining <= 0:
+                continue
+            if spec.at is not None and at is not None and spec.at != at:
+                continue
+            spec.remaining -= 1
+            self.fired.append((site, at, spec.kind))
+            return spec
+        return None
+
+    def fired_count(self, site: Optional[str] = None) -> int:
+        if site is None:
+            return len(self.fired)
+        return sum(1 for s, _, _ in self.fired if s == site)
+
+    # -- batch-stream injection ---------------------------------------------
+
+    def wrap_batch_at(self, batch_at: Callable[[int], Any]
+                      ) -> Callable[[int], Any]:
+        """Wrap a deterministic ``batch_at(step)`` stream with the data
+        sites: ``data.transient`` raises (each call re-fires, so a retry
+        consumes one firing per attempt and a ``count``-bounded spec heals
+        after ``count`` failures), ``data.nan`` poisons every float leaf of
+        the produced batch with NaN (the injected stand-in for a corrupt
+        record — the non-finite guard must catch the resulting gradients)."""
+        import jax
+        import jax.numpy as jnp
+
+        def wrapped(step: int):
+            if self.fire(DATA_TRANSIENT, step) is not None:
+                raise TransientDataError(
+                    f"injected transient data-source failure at step {step}")
+            batch = batch_at(step)
+            if self.fire(DATA_NAN, step) is not None:
+                def poison(a):
+                    if hasattr(a, "dtype") and \
+                            jnp.issubdtype(a.dtype, jnp.inexact):
+                        return jnp.full_like(a, jnp.nan)
+                    return a
+                batch = jax.tree.map(poison, batch)
+            return batch
+
+        return wrapped
+
+
+def advance_clock(clock: Callable[[], float], dt: float) -> None:
+    """Make ``dt`` seconds pass on an injectable clock: a test FakeClock
+    (anything with ``.advance``) advances virtually — no real sleep — while
+    a wall clock sleeps for real (the launcher path)."""
+    if hasattr(clock, "advance"):
+        clock.advance(dt)
+    else:
+        import time
+        time.sleep(dt)

@@ -95,7 +95,9 @@ def run_episodic(args) -> None:
                                  cache_capacity=args.cache_capacity,
                                  warm_dir=args.warm_dir,
                                  query_slo_us=args.query_slo_us,
-                                 adapt_cost_hint_us=args.adapt_cost_hint_us)
+                                 adapt_cost_hint_us=args.adapt_cost_hint_us,
+                                 max_queue=args.max_queue,
+                                 deadline_us=args.deadline_us)
     # cold wave first so every warm request finds its user's state cached
     # regardless of slot count — warm traffic measures the cache, not
     # admission-wave luck
@@ -104,7 +106,9 @@ def run_episodic(args) -> None:
     engine.run_to_completion(warm)
     dt = time.time() - t0
     s = engine.stats()
-    assert all(r.done for r in reqs)
+    # every request reaches a terminal outcome: served, or a counted
+    # degradation (backpressure rejection / deadline abandonment / failed)
+    assert all(r.done or r.rejected for r in reqs)
     print(f"episodic serve: learner={args.learner} {len(reqs)} requests "
           f"({n_users} distinct users) in {dt:.2f}s on {args.slots} slots")
     print(f"  tasks adapted {s['tasks_adapted']} "
@@ -119,6 +123,11 @@ def run_episodic(args) -> None:
           f"store: evictions={s['evictions']} spills={s['spills']} "
           f"rehydrates={s['rehydrates']}, "
           f"slo_preemptions={s['slo_preemptions']}")
+    print(f"  degradation: quarantined={s['quarantined']:.0f} "
+          f"spill_errors={s['spill_errors']:.0f} "
+          f"rejections={s['rejections']:.0f} "
+          f"deadline_abandoned={s['deadline_abandoned']:.0f} "
+          f"failed_requests={s['failed_requests']:.0f}")
     for r in reqs[:4]:
         print(f"  req uid={r.uid}: cache_hit={r.cache_hit} "
               f"preds={r.predictions()[:8].tolist()}")
@@ -157,6 +166,15 @@ def main() -> None:
                     help="per-request first-logit SLO in microseconds: a "
                          "pending adapt wave is deferred when it would "
                          "push a live lane's queries past this deadline")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue: a submit over the "
+                         "bound is rejected with a retry-after estimate "
+                         "(EWMA adapt cost) instead of queueing unbounded "
+                         "(default: unbounded)")
+    ap.add_argument("--deadline-us", type=float, default=None,
+                    help="per-request deadline from enqueue: a request "
+                         "still logit-less past it is abandoned and its "
+                         "lane/queue slot freed (default: off)")
     ap.add_argument("--adapt-cost-hint-us", type=float, default=None,
                     help="seed for the EWMA adapt-dispatch cost estimate "
                          "the SLO scheduler plans with (measured "

@@ -41,6 +41,7 @@ Mahalanobis aggregation kernels):
 from __future__ import annotations
 
 import argparse
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -54,11 +55,28 @@ from repro.launch.mesh import (make_dp_mesh, make_production_mesh,
 from repro.optim.schedules import schedule_for
 from repro.sharding import rules
 from repro.sharding.ctx import P
+from repro.faults import PreemptionSignal
 from repro.train.checkpoint import CheckpointManager
-from repro.train.loop import train
+from repro.train.loop import PreemptedError, train
 from repro.train.step import (adamw_for, make_episodic_init_state,
                               make_episodic_train_step, make_init_state,
                               make_train_step)
+
+# EX_TEMPFAIL: the canonical "retry me" exit — a preempted run flushed a
+# checkpoint and rerunning the same command resumes bit-exactly.
+EXIT_PREEMPTED = 75
+
+
+def _finish_preempted(e: PreemptedError) -> None:
+    print(f"preempted: {e} — rerun to resume", flush=True)
+    sys.exit(EXIT_PREEMPTED)
+
+
+def _fault_summary(result) -> str:
+    return (f"nonfinite_skips={len(result.nonfinite_steps)} "
+            f"rollbacks={result.rollbacks} "
+            f"data_retries={result.data_retries} "
+            f"stragglers={result.straggler_steps}")
 
 
 def run_episodic(args) -> None:
@@ -159,11 +177,17 @@ def run_episodic(args) -> None:
     ckpt_dir = args.ckpt_dir or \
         f"/tmp/repro_train_ckpt_episodic_{args.learner}{suffix}"
     ckpt = CheckpointManager(ckpt_dir, keep=3)
-    result = train(state, step, batch_at, args.steps, ckpt=ckpt,
-                   ckpt_every=args.ckpt_every, state_template=state_abs,
-                   log_every=max(args.steps // 10, 1),
-                   prefetch=meta.prefetch, donate=meta.donate,
-                   batch_put=batch_put)
+    preempt = PreemptionSignal().install()
+    try:
+        result = train(state, step, batch_at, args.steps, ckpt=ckpt,
+                       ckpt_every=args.ckpt_every, state_template=state_abs,
+                       log_every=max(args.steps // 10, 1),
+                       prefetch=meta.prefetch, donate=meta.donate,
+                       batch_put=batch_put, preempt=preempt,
+                       max_nonfinite=args.max_nonfinite_skips,
+                       data_retries=args.data_retries)
+    except PreemptedError as e:
+        _finish_preempted(e)
     if not result.metrics_history:
         print(f"nothing to do: checkpoint already at step {result.step} "
               f"(resumed_from={result.resumed_from})")
@@ -172,7 +196,8 @@ def run_episodic(args) -> None:
           f"loss {result.metrics_history[0]['loss']:.4f} -> "
           f"{result.metrics_history[-1]['loss']:.4f}; "
           f"accuracy {result.metrics_history[-1]['accuracy']:.3f}; "
-          f"throughput {result.throughput(meta.tasks_per_step):.1f} tasks/s")
+          f"throughput {result.throughput(meta.tasks_per_step):.1f} tasks/s; "
+          f"{_fault_summary(result)}")
 
 
 def main() -> None:
@@ -230,6 +255,14 @@ def main() -> None:
                     default=None,
                     help="LITE no-grad complement compute dtype "
                          "(default fp32)")
+    ap.add_argument("--max-nonfinite-skips", type=int, default=8,
+                    help="consecutive NaN/inf-skipped steps tolerated "
+                         "before divergence rollback to the last "
+                         "checkpoint (then DivergenceError)")
+    ap.add_argument("--data-retries", type=int, default=2,
+                    help="bounded exponential-backoff retries for a "
+                         "failing batch source before the error "
+                         "propagates")
     ap.add_argument("--kernel-backend",
                     choices=["ref", "pallas", "auto", "naive"],
                     default="ref",
@@ -282,9 +315,16 @@ def main() -> None:
 
         ckpt = CheckpointManager(args.ckpt_dir or "/tmp/repro_train_ckpt",
                                  keep=3)
-        result = train(state, step, batch_at, args.steps,
-                       ckpt=ckpt, ckpt_every=args.ckpt_every,
-                       state_template=state_abs, log_every=25)
+        preempt = PreemptionSignal().install()
+        try:
+            result = train(state, step, batch_at, args.steps,
+                           ckpt=ckpt, ckpt_every=args.ckpt_every,
+                           state_template=state_abs, log_every=25,
+                           preempt=preempt,
+                           max_nonfinite=args.max_nonfinite_skips,
+                           data_retries=args.data_retries)
+        except PreemptedError as e:
+            _finish_preempted(e)
     if not result.metrics_history:
         print(f"nothing to do: checkpoint already at step {result.step} "
               f"(resumed_from={result.resumed_from})")
@@ -292,8 +332,8 @@ def main() -> None:
     print(f"done at step {result.step}; "
           f"loss {result.metrics_history[0]['loss']:.4f} -> "
           f"{result.metrics_history[-1]['loss']:.4f}; "
-          f"stragglers={result.straggler_steps}; "
-          f"resumed_from={result.resumed_from}")
+          f"resumed_from={result.resumed_from}; "
+          f"{_fault_summary(result)}")
 
 
 if __name__ == "__main__":

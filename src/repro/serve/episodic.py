@@ -59,6 +59,7 @@ import dataclasses
 import math
 import os
 import pathlib
+import shutil
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
@@ -98,6 +99,15 @@ class EpisodicRequest:
     ``query_x`` is the query stream — served in engine-sized chunks,
     logits accumulated in arrival order.
 
+    Degradation outcomes (each also a ``stats()`` counter): ``rejected``
+    — bounded-queue backpressure refused the submit (``retry_after_us``
+    estimates when to re-offer; the request was never admitted and no
+    admitted request is ever dropped for it); ``abandoned`` — the
+    per-request deadline passed before the first logit (queued or still
+    awaiting adaptation) and the engine freed the lane; ``failed`` — a
+    support-less request whose only stored state turned out corrupt
+    (quarantined): nothing can ever produce its logits.
+
     The ``t_*`` timestamps are stamped by the engine from its injectable
     clock (seconds, monotonic): ``t_enqueue`` at submit, ``t_admit`` when
     a slot is taken, ``t_adapt`` when the adapted state lands (absent on
@@ -113,6 +123,10 @@ class EpisodicRequest:
     served: int = 0
     cache_hit: Optional[bool] = None             # set at admission
     done: bool = False
+    rejected: bool = False                       # backpressure refusal
+    retry_after_us: Optional[float] = None       # stamped on rejection
+    abandoned: bool = False                      # deadline passed pre-logit
+    failed: bool = False                         # unrecoverable (see above)
     t_enqueue: Optional[float] = None
     t_admit: Optional[float] = None
     t_adapt: Optional[float] = None
@@ -189,12 +203,26 @@ class WarmTaskStore:
     checkpoint serialization (``save_array_tree``/``load_array_tree``) so
     a rehydrated state is bit-exact to the spilled one.  The abstract
     template per uid (shapes/dtypes/treedef — tiny) stays host-side; the
-    arrays live on disk.  Scoped to the engine's lifetime, like the L1."""
+    arrays live on disk.  Scoped to the engine's lifetime, like the L1.
 
-    def __init__(self, directory: str | pathlib.Path):
+    Every read verifies the whole-content CRC32 the writer embedded
+    (``load_array_tree(verify=True)``); a zero-byte/truncated file fails
+    earlier inside ``np.load``.  ANY read failure — bad zip, checksum
+    mismatch, missing leaf — *quarantines* the entry: the file is renamed
+    aside (``quarantine_uid_*.npz``, kept for forensics), the template is
+    dropped, ``quarantined`` is bumped, and ``get`` returns None so the
+    caller falls back to re-adaptation.  A file that vanished outright
+    (template present, path gone) counts as quarantined too.  ``fault_plan``
+    (:class:`repro.faults.FaultPlan`) drives site ``warm.corrupt``:
+    fired at a uid's ``put``, the just-published npz is truncated to
+    ``payload`` bytes — crash-mid-write residue, deterministically."""
+
+    def __init__(self, directory: str | pathlib.Path, fault_plan=None):
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self._templates: Dict[int, PyTree] = {}
+        self._fault_plan = fault_plan
+        self.quarantined = 0
 
     def _path(self, uid: int) -> pathlib.Path:
         return self.dir / f"uid_{uid}.npz"
@@ -206,11 +234,38 @@ class WarmTaskStore:
         self._templates[uid] = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
             state)
+        if self._fault_plan is not None:
+            spec = self._fault_plan.fire("warm.corrupt", uid)
+            if spec is not None:
+                keep = int(spec.payload) if spec.payload is not None else 16
+                with open(self._path(uid), "r+b") as f:
+                    f.truncate(keep)
+
+    def _quarantine(self, uid: int, err: Exception) -> None:
+        path = self._path(uid)
+        self.quarantined += 1
+        self._templates.pop(uid, None)
+        if path.exists():
+            aside = self.dir / f"quarantine_uid_{uid}_{self.quarantined}.npz"
+            os.replace(path, aside)
+            where = f"moved aside to {aside.name}"
+        else:
+            where = "file already gone"
+        print(f"warm tier: quarantined uid={uid} ({type(err).__name__}: "
+              f"{err}; {where})", flush=True)
 
     def get(self, uid: int) -> Optional[PyTree]:
-        if uid not in self:
+        if uid not in self._templates:
             return None
-        return load_array_tree(self._path(uid), self._templates[uid])
+        if not self._path(uid).exists():
+            self._quarantine(uid, FileNotFoundError(str(self._path(uid))))
+            return None
+        try:
+            return load_array_tree(self._path(uid), self._templates[uid],
+                                   verify=True)
+        except Exception as e:  # noqa: BLE001 — any unreadable entry
+            self._quarantine(uid, e)
+            return None
 
     def __contains__(self, uid: int) -> bool:
         return uid in self._templates and self._path(uid).exists()
@@ -227,25 +282,56 @@ class TwoTierTaskStore:
     tier holds it).  ``hits``/``misses`` are the L1's; ``spills`` counts
     evictions that landed in the warm tier, ``rehydrates`` counts
     warm-tier loads.  With ``warm_dir=None`` eviction discards (the PR3
-    behavior) and ``rehydrates`` stays 0."""
+    behavior) and ``rehydrates`` stays 0.
+
+    A spill whose write fails (warm directory removed out from under the
+    engine — tmpfs cleanup, the ``warm.vanish`` fault site) does NOT take
+    the engine down: the error is logged once, ``spill_errors`` is
+    bumped, and the store degrades to L1-only for the rest of its life
+    (evictions discard, warm lookups stop) — correctness is untouched
+    because a discarded state just re-adapts on the next request."""
 
     def __init__(self, capacity: int = 64,
-                 warm_dir: Optional[str | pathlib.Path] = None):
-        self.warm = WarmTaskStore(warm_dir) if warm_dir is not None else None
+                 warm_dir: Optional[str | pathlib.Path] = None,
+                 fault_plan=None):
+        self.warm = (WarmTaskStore(warm_dir, fault_plan=fault_plan)
+                     if warm_dir is not None else None)
         self.l1 = TaskStateCache(capacity, on_evict=self._spill)
+        self._fault_plan = fault_plan
         self.spills = 0
         self.rehydrates = 0
+        self.spill_errors = 0
+        self.warm_disabled = False
+
+    @property
+    def quarantined(self) -> int:
+        return self.warm.quarantined if self.warm is not None else 0
+
+    def _warm_live(self) -> bool:
+        return self.warm is not None and not self.warm_disabled
 
     def _spill(self, uid: int, state: PyTree) -> None:
-        if self.warm is not None:
+        if not self._warm_live():
+            return
+        if self._fault_plan is not None and \
+                self._fault_plan.fire("warm.vanish", uid) is not None:
+            shutil.rmtree(self.warm.dir, ignore_errors=True)
+        try:
             self.warm.put(uid, state)
-            self.spills += 1
+        except OSError as e:
+            self.spill_errors += 1
+            self.warm_disabled = True
+            print(f"warm tier: spill of uid={uid} failed "
+                  f"({type(e).__name__}: {e}) — degrading to L1-only, "
+                  f"evicted states will re-adapt", flush=True)
+            return
+        self.spills += 1
 
     def get(self, uid: int) -> Optional[PyTree]:
         state = self.l1.get(uid)
         if state is not None:
             return state
-        if self.warm is not None:
+        if self._warm_live():
             state = self.warm.get(uid)
             if state is not None:
                 self.rehydrates += 1
@@ -257,7 +343,7 @@ class TwoTierTaskStore:
         self.l1.put(uid, state)
 
     def __contains__(self, uid: int) -> bool:
-        return uid in self.l1 or (self.warm is not None and uid in self.warm)
+        return uid in self.l1 or (self._warm_live() and uid in self.warm)
 
     def __len__(self) -> int:
         return len(self.l1)
@@ -294,9 +380,22 @@ class EpisodicServeEngine:
                  clock: Optional[Callable[[], float]] = None,
                  warm_dir: Optional[str | pathlib.Path] = None,
                  query_slo_us: Optional[float] = None,
-                 adapt_cost_hint_us: Optional[float] = None):
+                 adapt_cost_hint_us: Optional[float] = None,
+                 fault_plan=None,
+                 max_queue: Optional[int] = None,
+                 deadline_us: Optional[float] = None):
+        """Fault-tolerance knobs: ``fault_plan`` threads to the store tiers
+        (sites ``warm.corrupt`` / ``warm.vanish``); ``max_queue`` bounds
+        the admission queue — a submit over the bound is REJECTED with a
+        ``retry_after_us`` estimate from the adapt-cost EWMA instead of
+        growing the queue without bound (admitted requests are never
+        dropped); ``deadline_us`` abandons a request whose deadline
+        (from ``t_enqueue``) passes before its first logit, freeing the
+        lane/queue slot.  All three default off — behavior unchanged."""
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.learner = learner
         self.params = params
         # serve-time default: exact forward values, chunk-bounded memory
@@ -305,9 +404,12 @@ class EpisodicServeEngine:
         self.n_slots = n_slots
         self.query_chunk = query_chunk
         self.support_buckets = tuple(sorted(support_buckets))
-        self.store = TwoTierTaskStore(cache_capacity, warm_dir)
+        self.store = TwoTierTaskStore(cache_capacity, warm_dir,
+                                      fault_plan=fault_plan)
         self.clock = clock if clock is not None else time.monotonic
         self.query_slo_us = query_slo_us
+        self.max_queue = max_queue
+        self.deadline_us = deadline_us
         # EWMA of measured adapt-dispatch wall time; zero-duration
         # observations (a FakeClock that wasn't advanced) are ignored so
         # scripted tests keep a stable, assertable estimate
@@ -345,6 +447,9 @@ class EpisodicServeEngine:
         self.queries_served = 0
         self.slo_preemptions = 0
         self.steps = 0
+        self.rejections = 0
+        self.deadline_abandoned = 0
+        self.failed_requests = 0
 
     # -- scheduling ----------------------------------------------------------
 
@@ -354,13 +459,26 @@ class EpisodicServeEngine:
                 return i
         return None
 
-    def submit(self, req: EpisodicRequest) -> None:
+    def submit(self, req: EpisodicRequest) -> bool:
         """Enqueue ``req`` (stamps ``t_enqueue``); admission happens FIFO
         inside ``step`` as slots free up — the continuous-batching entry
-        point."""
+        point.  With ``max_queue`` set, a submit that would overflow the
+        bound is REJECTED (returns False; ``req.rejected`` set): the
+        request is not enqueued, nothing already admitted/queued is
+        displaced, and ``req.retry_after_us`` carries a re-offer estimate
+        — queue-depth-ahead / n_slots adapt waves at the EWMA-estimated
+        adapt cost (0 when no estimate exists yet)."""
         if req.t_enqueue is None:
             req.t_enqueue = self.clock()
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            req.rejected = True
+            est = self._adapt_cost_est_us or 0.0
+            req.retry_after_us = math.ceil(
+                (len(self._queue) + 1) / self.n_slots) * est
+            self.rejections += 1
+            return False
         self._queue.append(req)
+        return True
 
     def add_request(self, req: EpisodicRequest) -> bool:
         """Immediate-admission compatibility path: try to place ``req`` in
@@ -396,6 +514,17 @@ class EpisodicServeEngine:
             raise ValueError(f"request uid={req.uid}: no cached task state "
                              f"and no support set to adapt on")
         state = self.store.get(req.uid)
+        if state is None and req.support_x is None:
+            # membership said the state existed, but the read quarantined
+            # it (corrupt warm entry discovered at load).  With no support
+            # set nothing can ever produce this task's state — terminal
+            # failure, not a crash, and the slot stays free.  A request
+            # WITH support just falls through to re-adaptation.
+            req.failed = True
+            req.done = True
+            req.t_done = self.clock()
+            self.failed_requests += 1
+            return True                          # consumed; no slot taken
         req.cache_hit = state is not None
         req.t_admit = self.clock()
         self._slots[self._free_slot()] = _Slot(
@@ -546,12 +675,47 @@ class EpisodicServeEngine:
                 self._retire(i)
         return served
 
+    def _abandon_hopeless(self) -> None:
+        """Deadline abandonment (``deadline_us``): a request whose
+        deadline (``t_enqueue + deadline_us``) has passed before its FIRST
+        logit is never going to meet it — drop it from the queue, or
+        retire its lane if it was admitted but still awaiting (possibly
+        SLO-deferred) adaptation, so the capacity goes to requests that
+        can still be served in time.  A request already streaming logits
+        is past the latency-critical point and runs to completion —
+        abandonment never discards produced output."""
+        if self.deadline_us is None:
+            return
+        now_us = self.clock() * 1e6
+
+        def hopeless(r: EpisodicRequest) -> bool:
+            return (r.t_first_logit is None
+                    and now_us > r.t_enqueue * 1e6 + self.deadline_us)
+
+        kept = collections.deque()
+        for r in self._queue:
+            if hopeless(r):
+                r.abandoned = True
+                r.done = True
+                r.t_done = now_us / 1e6
+                self.deadline_abandoned += 1
+            else:
+                kept.append(r)
+        self._queue = kept
+        for i, s in enumerate(self._slots):
+            if s is not None and hopeless(s.req):
+                s.req.abandoned = True
+                self.deadline_abandoned += 1
+                self._retire(i)
+
     def step(self) -> int:
-        """One engine step: FIFO admission from the queue, then spend the
+        """One engine step: deadline abandonment first (frees lanes/queue
+        slots), then FIFO admission from the queue, then spend the
         step's dispatches — the pending adapt wave first UNLESS the SLO
         scheduler preempts it (a live lane's query deadline would be
         missed waiting out the adapt dispatch), then one micro-batched
         query dispatch.  Returns #queries served."""
+        self._abandon_hopeless()
         self._admit_from_queue()
         pending_adapt = any(s is not None and s.state is None
                             for s in self._slots)
@@ -583,7 +747,15 @@ class EpisodicServeEngine:
         ``adapt_p*_us`` is enqueue → adapted state ready (cold requests
         only); ``query_p*_us`` is enqueue → first logit; both computed
         from the injected clock.  ``cache_*``/``hit_rate`` are the L1's;
-        ``spills``/``rehydrates`` count warm-tier traffic."""
+        ``spills``/``rehydrates`` count warm-tier traffic.
+
+        Degradation counters: ``quarantined`` (corrupt/vanished warm
+        entries moved aside), ``spill_errors`` (warm writes that failed —
+        >0 means the store degraded to L1-only), ``rejections``
+        (bounded-queue backpressure refusals), ``deadline_abandoned``
+        (requests dropped past their deadline pre-first-logit),
+        ``failed_requests`` (support-less requests whose only stored
+        state was quarantined)."""
         l1 = self.store.l1
         lookups = l1.hits + l1.misses
         return dict(
@@ -598,6 +770,11 @@ class EpisodicServeEngine:
             overwrites=l1.overwrites,
             spills=self.store.spills,
             rehydrates=self.store.rehydrates,
+            quarantined=self.store.quarantined,
+            spill_errors=self.store.spill_errors,
+            rejections=self.rejections,
+            deadline_abandoned=self.deadline_abandoned,
+            failed_requests=self.failed_requests,
             slo_preemptions=self.slo_preemptions,
             adapt_cost_est_us=(self._adapt_cost_est_us
                                if self._adapt_cost_est_us is not None

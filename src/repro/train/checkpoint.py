@@ -23,6 +23,7 @@ import json
 import os
 import pathlib
 import shutil
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -31,6 +32,23 @@ import numpy as np
 
 PyTree = Any
 _BF16 = "bfloat16"
+
+
+class ChecksumError(RuntimeError):
+    """Stored content checksum does not match the bytes on disk — the file
+    was corrupted after its atomic publish (bit-rot, partial overwrite).
+    The warm task-state tier quarantines on this."""
+
+
+def _tree_crc32(arrays: Dict[str, np.ndarray], dtypes: Dict[str, str]) -> int:
+    """CRC32 over the encoded leaves (sorted key order) + the dtype
+    sidecar: a cheap whole-content checksum, stable across writes of the
+    same pytree."""
+    crc = zlib.crc32(json.dumps(dtypes, sort_keys=True).encode())
+    for k in sorted(arrays):
+        crc = zlib.crc32(k.encode(), crc)
+        crc = zlib.crc32(np.ascontiguousarray(arrays[k]).tobytes(), crc)
+    return crc & 0xFFFFFFFF
 
 
 def _path_str(path) -> str:
@@ -78,24 +96,42 @@ def _decode_array(arr: np.ndarray, dtype_str: str) -> np.ndarray:
 
 def save_array_tree(file, tree: PyTree) -> None:
     """One self-describing npz: path-keyed leaves + a ``__dtypes__`` json
-    member, fsynced before return.  Atomicity (tmp + ``os.replace``) is the
-    caller's job.  Values roundtrip bit-exactly through
-    :func:`load_array_tree` (fp arrays are stored verbatim; bf16 via uint16
-    views)."""
+    member + a ``__crc32__`` whole-content checksum, fsynced before return.
+    Atomicity (tmp + ``os.replace``) is the caller's job.  Values roundtrip
+    bit-exactly through :func:`load_array_tree` (fp arrays are stored
+    verbatim; bf16 via uint16 views)."""
     arrays, dtypes = encode_array_tree(tree)
+    crc = _tree_crc32(arrays, dtypes)
     with open(file, "wb") as f:
-        np.savez(f, __dtypes__=np.asarray(json.dumps(dtypes)), **arrays)
+        np.savez(f, __dtypes__=np.asarray(json.dumps(dtypes)),
+                 __crc32__=np.uint32(crc), **arrays)
         f.flush()
         os.fsync(f.fileno())
 
 
-def load_array_tree(file, template: PyTree) -> PyTree:
+def load_array_tree(file, template: PyTree, verify: bool = False) -> PyTree:
     """Rebuild a :func:`save_array_tree` npz against an abstract template
     (``jax.eval_shape``-style): structure and dtypes are re-imposed from
     the template, bit-exact for matching dtypes — the same contract as
-    :meth:`CheckpointManager.restore`."""
+    :meth:`CheckpointManager.restore`.
+
+    ``verify=True`` recomputes the whole-content checksum against the
+    stored ``__crc32__`` and raises :class:`ChecksumError` on mismatch
+    (files written before checksums existed, lacking the member, pass) —
+    the warm task-state tier loads with this on and quarantines on any
+    failure.  Truncated/zero-byte files fail earlier, inside ``np.load``'s
+    zip parsing."""
     data = np.load(file)
     dtypes = json.loads(str(data["__dtypes__"]))
+    if verify and "__crc32__" in data.files:
+        arrays = {k: data[k] for k in data.files
+                  if k not in ("__dtypes__", "__crc32__")}
+        crc = _tree_crc32(arrays, dtypes)
+        stored = int(data["__crc32__"])
+        if crc != stored:
+            raise ChecksumError(
+                f"{file}: content crc32 {crc:#010x} != stored "
+                f"{stored:#010x} — corrupted after publish")
     leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(template)
     out = []
     for path, leaf in leaves_with_path:
@@ -108,10 +144,23 @@ def load_array_tree(file, template: PyTree) -> PyTree:
 
 
 class CheckpointManager:
-    def __init__(self, directory: str | pathlib.Path, keep: int = 3):
+    def __init__(self, directory: str | pathlib.Path, keep: int = 3,
+                 fault_plan=None):
+        """``fault_plan`` (:class:`repro.faults.FaultPlan`) injects
+        simulated kills at the two crash-consistency-critical points in
+        ``save`` — sites ``ckpt.pre_commit`` / ``ckpt.pre_replace`` — so
+        tests prove a death mid-save leaves the previous committed
+        checkpoint restorable and a later save recovers the directory."""
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self._fault_plan = fault_plan
+
+    def _maybe_kill(self, site: str, step: int) -> None:
+        if self._fault_plan is not None and \
+                self._fault_plan.fire(site, step) is not None:
+            from repro.faults.plan import InjectedKill
+            raise InjectedKill(f"killed at {site} while saving step {step}")
 
     # -- save ---------------------------------------------------------------
 
@@ -129,7 +178,9 @@ class CheckpointManager:
             os.fsync(f.fileno())
         meta = dict(step=step, dtypes=dtypes, extra=extra or {})
         (tmp / "meta.json").write_text(json.dumps(meta))
+        self._maybe_kill("ckpt.pre_commit", step)
         (tmp / "COMMIT").write_text("ok")
+        self._maybe_kill("ckpt.pre_replace", step)
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)           # atomic publish

@@ -39,14 +39,20 @@ class Prefetcher:
     ``depth`` bounds how many batches may be in flight (2 = classic double
     buffering: one being consumed, one being built).  Batches are
     ``jax.device_put`` from the worker thread, so the transfer itself also
-    overlaps compute.  Exceptions in ``batch_at`` are re-raised from
-    ``get``.  Always ``close()`` (the training loop does so in a
-    ``finally``) so a preempted run doesn't leak the thread.
+    overlaps compute.  A failing ``batch_at`` is retried up to ``retries``
+    times with exponential backoff (``backoff_s * 2**attempt``; 0 = no
+    wait, which is what deterministic tests use) — transient data-source
+    faults heal in place and the delivered stream is unchanged; only an
+    error that survives every retry is re-raised from ``get``.
+    ``retries_used`` counts the retries actually spent (surfaced in
+    ``TrainResult.data_retries``).  Always ``close()`` (the training loop
+    does so in a ``finally``) so a preempted run doesn't leak the thread.
     """
 
     def __init__(self, batch_at: Callable[[int], PyTree], start: int,
                  stop: int, depth: int = 2, to_device: bool = True,
-                 put: Optional[Callable[[PyTree], PyTree]] = None):
+                 put: Optional[Callable[[PyTree], PyTree]] = None,
+                 retries: int = 0, backoff_s: float = 0.05):
         """``put`` overrides the default ``jax.device_put`` — pass a
         sharded transfer (e.g. ``device_put`` with a ``NamedSharding``
         over the task axis) so batches land in the mesh layout the
@@ -61,6 +67,9 @@ class Prefetcher:
         self._batch_at = batch_at
         self._to_device = to_device
         self._device_put = put if put is not None else jax.device_put
+        self._retries = retries
+        self._backoff_s = backoff_s
+        self.retries_used = 0
         self._thread = threading.Thread(
             target=self._worker, args=(start, stop), daemon=True,
             name="batch-prefetcher")
@@ -75,12 +84,28 @@ class Prefetcher:
                 continue
         return False
 
+    def _fetch(self, s: int) -> PyTree:
+        """``batch_at(s)`` with bounded exponential-backoff retry — the
+        tolerance half of the ``data.transient`` fault site.  The wait uses
+        the stop event so ``close()`` interrupts a backoff immediately."""
+        delay = self._backoff_s
+        for attempt in range(self._retries + 1):
+            try:
+                return self._batch_at(s)
+            except Exception:
+                if attempt == self._retries or self._stop_evt.is_set():
+                    raise
+                self.retries_used += 1
+                if delay > 0:
+                    self._stop_evt.wait(delay)
+                    delay *= 2
+
     def _worker(self, start: int, stop: int) -> None:
         try:
             for s in range(start, stop):
                 if self._stop_evt.is_set():
                     return
-                batch = self._batch_at(s)
+                batch = self._fetch(s)
                 if self._to_device:
                     batch = self._device_put(batch)
                 if not self._put((s, batch)):

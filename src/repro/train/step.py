@@ -37,7 +37,12 @@ def make_init_state(cfg: ModelConfig, adamw_cfg: AdamWConfig) -> Callable:
 
 def make_train_step(cfg: ModelConfig, adamw_cfg: AdamWConfig,
                     schedule: Callable | None = None,
-                    max_grad_norm: float = 1.0) -> Callable:
+                    max_grad_norm: float = 1.0,
+                    skip_nonfinite: bool = True) -> Callable:
+    """``skip_nonfinite`` (default on): a NaN/inf gradient suppresses the
+    update via a fused ``where``-select — params and opt state come out
+    bit-identical to the inputs, ``metrics['nonfinite']`` is 1.0, and the
+    loop's consecutive-skip budget decides when that means divergence."""
     api = get_api(cfg)
     if schedule is None:
         schedule = functools.partial(cosine_schedule, peak=3e-4,
@@ -54,6 +59,13 @@ def make_train_step(cfg: ModelConfig, adamw_cfg: AdamWConfig,
         new_params, new_opt = adamw_update(state["params"], grads,
                                            state["opt"], lr, adamw_cfg)
         out_metrics = dict(loss=loss, grad_norm=gnorm, lr=lr, **metrics)
+        if skip_nonfinite:
+            from repro.core.episodic_train import _tree_all_finite
+            ok = _tree_all_finite(grads)
+            pick = lambda n, o: jnp.where(ok, n, o)  # noqa: E731
+            new_params = jax.tree.map(pick, new_params, state["params"])
+            new_opt = jax.tree.map(pick, new_opt, state["opt"])
+            out_metrics["nonfinite"] = (~ok).astype(jnp.float32)
         return dict(params=new_params, opt=new_opt), out_metrics
 
     return train_step
@@ -124,7 +136,8 @@ def make_episodic_train_step(learner, lite, meta_cfg,
                               meta_cfg.warmup_steps, meta_cfg.total_steps),
         mesh=mesh if needs_mesh else None, dp_axis=dp_axis,
         dcn_axis=dcn_axis, grad_reduce=meta_cfg.grad_reduce,
-        accum_steps=meta_cfg.accum_steps)
+        accum_steps=meta_cfg.accum_steps,
+        skip_nonfinite=meta_cfg.skip_nonfinite)
 
     def train_step(state: State, batch: Dict) -> Tuple[State, Dict]:
         # the configured kernel backend is bound HERE, at trace time:
