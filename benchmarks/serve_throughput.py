@@ -19,6 +19,11 @@ Four comparisons:
   (checkpoint-serialized spill): fomaml is the expensive re-adapt tail
   (see table1_adaptation_cost.csv), exactly what the two-tier store
   avoids paying again.
+* ``engine_int8_cold`` vs ``engine_cold`` — the same cold request stream
+  through a ``serve_quant='int8'`` engine (frozen backbone in blockwise
+  int8, dequantized lazily in-jit): compile counters must match the fp32
+  engine and the ``param_bytes_resident`` column carries the measured
+  resident weight bytes of each engine.
 
     PYTHONPATH=src python benchmarks/serve_throughput.py
 """
@@ -91,6 +96,7 @@ def main() -> None:
                     query_p99_us=r.get("query_p99_us", ""),
                     adapt_compiles=r.get("adapt_compiles", ""),
                     predict_compiles=r.get("predict_compiles", ""),
+                    param_bytes_resident=r.get("param_bytes_resident", ""),
                     quarantined=r.get("quarantined", ""),
                     rejections=r.get("rejections", ""),
                     deadline_abandoned=r.get("deadline_abandoned", ""))
@@ -198,6 +204,7 @@ def main() -> None:
         quarantined=int(s_cold["quarantined"]),
         rejections=int(s_cold["rejections"]),
         deadline_abandoned=int(s_cold["deadline_abandoned"]),
+        param_bytes_resident=s_cold["param_bytes_resident"],
         **wave_pctls(cold))))
     rows.append(blank(dict(
         mode="engine_warm", tasks=n_req,
@@ -211,7 +218,36 @@ def main() -> None:
         quarantined=int(s_warm["quarantined"]),
         rejections=int(s_warm["rejections"]),
         deadline_abandoned=int(s_warm["deadline_abandoned"]),
+        param_bytes_resident=s_warm["param_bytes_resident"],
         **wave_pctls(warm))))
+
+    # -- int8 weight-stationary serving vs fp32, same traffic ----------------
+    # quantized frozen backbone (repro.serve.quant_params): same request
+    # stream, same bucket plan — the rows compare throughput, compile
+    # counters (must match the fp32 engine: identical dispatch paths), and
+    # the measured resident parameter bytes.
+    eng_q = EpisodicServeEngine(learner, params, lite=lite, n_slots=4,
+                                query_chunk=8, support_buckets=buckets,
+                                cache_capacity=args.engine_requests,
+                                serve_quant="int8")
+    cold_q = make_requests()
+    t0 = time.perf_counter()
+    eng_q.run_to_completion(cold_q)
+    dt_q = time.perf_counter() - t0
+    s_q = eng_q.stats()
+    rows.append(blank(dict(
+        mode="engine_int8_cold", tasks=n_req,
+        tasks_per_sec=round(s_q["tasks_adapted"] / dt_q, 1),
+        queries_per_sec=round(n_queries / dt_q, 1),
+        speedup=round(dt_cold / dt_q, 2),
+        hit_rate=round(s_q["hit_rate"], 3),
+        adapt_compiles=s_q["adapt_compiles"],
+        predict_compiles=s_q["predict_compiles"],
+        quarantined=int(s_q["quarantined"]),
+        rejections=int(s_q["rejections"]),
+        deadline_abandoned=int(s_q["deadline_abandoned"]),
+        param_bytes_resident=s_q["param_bytes_resident"],
+        **wave_pctls(cold_q))))
 
     # -- warm-tier rehydrate vs re-adaptation (fomaml: the expensive tail) ---
     import tempfile
@@ -253,6 +289,14 @@ def main() -> None:
     print(f"# warm (cached) pass speedup over cold: "
           f"{dt_cold / dt_warm:.2f}x; compile counters flat: "
           f"{s_warm['adapt_compiles'] == s_cold['adapt_compiles']}")
+    print(f"# int8 serving: resident weight bytes "
+          f"{s_cold['param_bytes_resident']} -> "
+          f"{s_q['param_bytes_resident']} "
+          f"(frozen slice {s_cold['frozen_param_bytes_resident']} -> "
+          f"{s_q['frozen_param_bytes_resident']}, "
+          f"{s_cold['frozen_param_bytes_resident'] / max(s_q['frozen_param_bytes_resident'], 1):.2f}x); "
+          f"compile counters match fp32: "
+          f"{(s_q['adapt_compiles'], s_q['predict_compiles']) == (s_cold['adapt_compiles'], s_cold['predict_compiles'])}")
 
 
 if __name__ == "__main__":

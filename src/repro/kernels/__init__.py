@@ -12,5 +12,9 @@ Kernels: flash_attention (causal/window/softcap online-softmax),
 mahalanobis (Simple CNAPs head), segment_pool / class_second_moment
 (LITE's aggregation sites as one-hot MXU matmuls — weight-aware, so
 padded TaskBatch lanes drop out natively), ssd_scan (Mamba-2
-intra-chunk), gmm (per-expert grouped GEMM for the MoE dispatch).
+intra-chunk), gmm (per-expert grouped GEMM for the MoE dispatch),
+int8_matmul (blocked int8 x f32 matmul with per-block scale applied
+in-kernel and fp32 accumulation — the weight-stationary serving path's
+native site for blockwise-quantized frozen weights; FORWARD-ONLY by
+contract, no custom_vjp: serving never differentiates through it).
 """

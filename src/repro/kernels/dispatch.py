@@ -56,9 +56,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import int8_matmul as _im
 from repro.kernels import mahalanobis as _md
 from repro.kernels import segment_pool as _sp
 from repro.kernels.tpu_compat import interpret_mode as _interpret
+from repro.optim import quant as _quant
 
 BACKENDS = ("naive", "ref", "pallas", "auto")
 
@@ -287,6 +289,53 @@ def chol_inverse(chol: jnp.ndarray) -> jnp.ndarray:
     eye = jnp.eye(chol.shape[-1], dtype=chol.dtype)
     return jax.vmap(
         lambda L: jax.scipy.linalg.cho_solve((L, True), eye))(chol)
+
+
+# ===========================================================================
+# int8_matmul: out[m, n] = sum_k x[m, k] * q[k, n] * scale[k, n // BLOCK]
+# ===========================================================================
+
+
+def _int8_matmul_oracle(x2: jnp.ndarray, qs) -> jnp.ndarray:
+    """Dequantize-then-dot: materialize the f32 weight and run a plain
+    GEMM.  Shared by ``naive`` and ``ref`` (there is no cheaper
+    association that avoids the f32 weight without a blocked kernel) —
+    this is the bit-exact-within-reassociation oracle the pallas parity
+    tests compare against."""
+    w = _quant.dequantize(qs)
+    return jnp.dot(x2.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32)
+
+
+def int8_matmul(x: jnp.ndarray, qs, backend: Optional[str] = None
+                ) -> jnp.ndarray:
+    """Weight-quantized matmul for the serving path: ``x @ W`` where W is
+    stored in the blockwise int8 ``{q, scale, n}`` form of
+    ``repro.optim.quant`` and is never materialized persistently in f32.
+
+    x: (..., K) float; qs: quantized (K, N) weight -> (..., N) float32.
+
+    FORWARD-ONLY contract — unlike the other sites there is no
+    custom_vjp: serving runs under stop_gradient and quantized weights
+    are frozen by definition, so a backward pass through this op is a
+    bug, not a missing feature.  (``naive``/``ref`` remain differentiable
+    as plain jnp by accident; ``pallas`` is not — do not rely on either.)
+
+    ``naive``/``ref``: dequantize to f32, one GEMM (the oracle).
+    ``pallas``: the blocked int8 kernel (``repro.kernels.int8_matmul``)
+    — int8 tiles scaled in-register, fp32 accumulation, interpret mode
+    off-TPU.  Leading batch dims are flattened around the 2-D kernel.
+    """
+    b = resolve_backend(backend)
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    if b in ("naive", "ref"):
+        out = _int8_matmul_oracle(x2, qs)
+    else:
+        out = _im.int8_matmul(x2, qs["q"], qs["scale"],
+                              interpret=_interpret())
+    n = _quant.resolve_n(qs)
+    return out.reshape(lead + (n,))
 
 
 def mahalanobis_head(qf: jnp.ndarray, mu: jnp.ndarray, chol: jnp.ndarray,

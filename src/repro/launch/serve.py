@@ -87,6 +87,37 @@ def run_episodic(args) -> None:
     buckets = plan_buckets([r.support_x.shape[0] for r in reqs],
                            max_buckets=2)
 
+    # weight-stationary serving layout: build a 1-D mesh over all local
+    # devices and either honor an explicit layout name or let the roofline
+    # chooser score every candidate on the compiled predict step
+    serve_layout, mesh, layout_rows = args.serve_layout, None, None
+    if serve_layout != "none" and len(jax.devices()) > 1:
+        mesh = jax.make_mesh((len(jax.devices()),), ("serve",))
+        if serve_layout == "auto":
+            import jax.numpy as jnp
+            from repro.core.episodic_train import task_key
+            from repro.data.episodic import collate_task_batch
+            from repro.roofline.analysis import choose_serving_layout
+            from repro.serve.quant_params import (dequantize_params,
+                                                  quantize_frozen)
+            sw = quantize_frozen(learner, params, args.serve_quant)
+            probe = [sample_image_task(jax.random.key(i), cfg)
+                     for i in range(2)]
+            batch = collate_task_batch(
+                probe, support_size=max(buckets),
+                query_size=probe[0].query_x.shape[0])
+            keys = jax.vmap(lambda i: task_key(jax.random.key(0), i))(
+                jnp.arange(2))
+            states = learner.adapt_batch(dequantize_params(sw), batch,
+                                         keys, lite)
+            pick = choose_serving_layout(
+                lambda w, st, qx: learner.predict_batch(
+                    dequantize_params(w), st, qx),
+                sw, (states, batch.query_x), mesh)
+            serve_layout, layout_rows = pick["choice"], pick["rows"]
+    elif serve_layout == "auto":
+        serve_layout = "none"               # single device: nothing to place
+
     engine = EpisodicServeEngine(learner, params, lite=lite,
                                  n_slots=args.slots,
                                  query_chunk=args.query_chunk,
@@ -97,7 +128,11 @@ def run_episodic(args) -> None:
                                  query_slo_us=args.query_slo_us,
                                  adapt_cost_hint_us=args.adapt_cost_hint_us,
                                  max_queue=args.max_queue,
-                                 deadline_us=args.deadline_us)
+                                 deadline_us=args.deadline_us,
+                                 serve_quant=args.serve_quant,
+                                 serve_layout=(None if serve_layout == "none"
+                                               else serve_layout),
+                                 mesh=mesh)
     # cold wave first so every warm request finds its user's state cached
     # regardless of slot count — warm traffic measures the cache, not
     # admission-wave luck
@@ -128,6 +163,15 @@ def run_episodic(args) -> None:
           f"rejections={s['rejections']:.0f} "
           f"deadline_abandoned={s['deadline_abandoned']:.0f} "
           f"failed_requests={s['failed_requests']:.0f}")
+    print(f"  weights: quant={args.serve_quant} layout={serve_layout} "
+          f"resident {s['param_bytes_resident']} B "
+          f"(fp32 {s['param_bytes_fp32']} B; frozen slice "
+          f"{s['frozen_param_bytes_resident']} / "
+          f"{s['frozen_param_bytes_fp32']} B)")
+    if layout_rows is not None:
+        for lo, r in layout_rows.items():
+            print(f"    layout {lo:18s} wire={r['wire_bytes']:12.0f} B "
+                  f"bottleneck={r['bottleneck']}")
     for r in reqs[:4]:
         print(f"  req uid={r.uid}: cache_hit={r.cache_hit} "
               f"preds={r.predictions()[:8].tolist()}")
@@ -182,6 +226,29 @@ def main() -> None:
     ap.add_argument("--lite-dtype", choices=["bfloat16", "float16"],
                     default=None,
                     help="serve-time adaptation compute dtype")
+    ap.add_argument("--serve-quant", choices=["none", "int8"],
+                    default="none",
+                    help="quantize the learner kind's FROZEN param slice "
+                         "(the backbone for the CNAPs family / finetuner; "
+                         "nothing for fomaml) into blockwise int8 for "
+                         "serving — dequantized lazily inside the jitted "
+                         "step, ~3-4x fewer resident weight bytes, logits "
+                         "within quantization tolerance (fomaml "
+                         "bit-identical)")
+    ap.add_argument("--serve-layout",
+                    choices=["auto", "none", "training",
+                             "weight_stationary", "replicated"],
+                    default="none",
+                    help="serving weight placement on the local device "
+                         "mesh: auto = compile every candidate and pick "
+                         "by the three-term roofline over the actual HLO "
+                         "(repro.roofline.analysis.choose_serving_layout), "
+                         "weight_stationary = shard matmul weights on the "
+                         "contracting dim (small-batch serving moves "
+                         "activations, not gathered weights), training = "
+                         "the ZeRO-ish weight-gathered train placement, "
+                         "replicated = every chip holds all weights "
+                         "(default: none — single-device placement)")
     ap.add_argument("--kernel-backend",
                     choices=["ref", "pallas", "auto", "naive"],
                     default="ref",

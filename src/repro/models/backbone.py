@@ -25,6 +25,13 @@ class BackboneDef:
       feature_dim: output feature width.
       film_sites: channel count at each FiLM site (drives the generator).
       name: for logging / benchmark tables.
+      quant_native_paths: '/'-joined param paths (e.g. "head/w") whose
+        weight the ``features`` fn can consume DIRECTLY in the blockwise
+        int8 ``{q, scale, n}`` form of ``repro.optim.quant`` — i.e. the
+        matmul sites routed through ``repro.kernels.dispatch.int8_matmul``.
+        The serving-time ``ServingWeights`` leaves these leaves quantized
+        end-to-end (no dequantize even inside the jitted step); everything
+        else it dequantizes lazily in-jit.  Empty = fp32-only backbone.
     """
 
     init: Callable[[Any], PyTree]
@@ -32,3 +39,4 @@ class BackboneDef:
     feature_dim: int
     film_sites: Sequence[int]
     name: str = "backbone"
+    quant_native_paths: Sequence[str] = ()

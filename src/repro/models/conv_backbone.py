@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.common.init import lecun_normal
 from repro.core.film import apply_film
+from repro.kernels import dispatch
 from repro.models.backbone import BackboneDef
 
 
@@ -59,7 +60,12 @@ def conv_features(params: Dict, x: jnp.ndarray, film: Optional[List[Dict]],
             h = jax.lax.reduce_window(
                 h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
     h = jnp.mean(h, axis=(1, 2))
-    return h @ params["head"]["w"] + params["head"]["b"]
+    w = params["head"]["w"]
+    if isinstance(w, dict):
+        # serving-time quantized head (ServingWeights leaves "head/w" in
+        # the blockwise int8 form): the int8 tiles feed the MXU directly
+        return dispatch.int8_matmul(h, w) + params["head"]["b"]
+    return h @ w + params["head"]["b"]
 
 
 def make_conv_backbone(cfg: ConvBackboneConfig) -> BackboneDef:
@@ -69,4 +75,5 @@ def make_conv_backbone(cfg: ConvBackboneConfig) -> BackboneDef:
         feature_dim=cfg.feature_dim,
         film_sites=tuple(cfg.widths),
         name=cfg.name,
+        quant_native_paths=("head/w",),
     )

@@ -64,7 +64,7 @@ def adamw_update(params: PyTree, grads: PyTree, state: Dict, lr: jnp.ndarray,
     count = state["count"] + 1
     c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
     c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
-    is_state_leaf = (lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}) \
+    is_state_leaf = (lambda x: isinstance(x, dict) and {"q", "scale"} <= set(x)) \
         if cfg.state_dtype == "int8" else None
 
     def upd(p, g, m, v):

@@ -2,9 +2,18 @@
 trick: 8-bit Adam a la Dettmers et al., adapted to a pure-pytree JAX form).
 
 A quantized tensor is stored as {q: int8 same-shape, scale: f32 with the
-last dim reduced by BLOCK}.  Quantize/dequantize are cheap elementwise ops
-fused into the optimizer update by XLA; the HBM win is 4x vs f32 state
-(the difference between a 1T-param model fitting 2 pods or 4).
+last dim reduced by BLOCK, n: original trailing dim}.  Quantize/dequantize
+are cheap elementwise ops fused into the optimizer update by XLA; the HBM
+win is 4x vs f32 state (the difference between a 1T-param model fitting 2
+pods or 4).
+
+``n`` rides in the dict so callers no longer carry the trailing dim out of
+band (``dequantize(qs)`` just works); the positional ``dequantize(qs, n)``
+path is kept for back-compat.  Because ``quantize`` slices ``q`` back to
+the original trailing dim, ``q.shape[-1]`` always equals ``n`` — the
+stored value is a plain python int, never a traced array, so it stays a
+static slice bound under jit and hashes into AOT compile-cache keys
+without adding a leaf (see ``_N_IS_STATIC`` note below).
 """
 from __future__ import annotations
 
@@ -25,19 +34,40 @@ def _pad_to_block(x: jnp.ndarray):
     return x, n
 
 
+# _N_IS_STATIC: ``n`` is stored as a plain python int.  Crossing a jit
+# boundary (or a checkpoint save/load) turns it into a 0-d array, at
+# which point it is no longer a usable slice bound — ``resolve_n`` then
+# falls back to ``q.shape[-1]``, which by construction always equals the
+# original trailing dim (quantize slices q back after padding).  The
+# stored int is therefore a convenience that can never go stale.
+
+
+def resolve_n(qs: Dict[str, jnp.ndarray], n=None) -> int:
+    """Original trailing dim of a quantized dict: explicit arg beats the
+    stored ``n``, which is trusted only while it is still a plain python
+    int (see _N_IS_STATIC); otherwise ``q.shape[-1]`` — always correct."""
+    if n is None:
+        n = qs.get("n")
+    if not (isinstance(n, int) and not isinstance(n, bool)):
+        n = qs["q"].shape[-1]
+    return int(n)
+
+
 def quantize(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
-    """x: float (..., N) -> {q int8 (..., N), scale f32 (..., ceil(N/B))}."""
+    """x: float (..., N) -> {q int8 (..., N), scale f32 (..., ceil(N/B)),
+    n: N}."""
     xp, n = _pad_to_block(x.astype(jnp.float32))
     blocks = xp.reshape(xp.shape[:-1] + (-1, BLOCK))
     scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
     scale = jnp.maximum(scale, 1e-12)
     q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127).astype(jnp.int8)
     q = q.reshape(xp.shape)[..., :n]
-    return dict(q=q, scale=scale)
+    return dict(q=q, scale=scale, n=n)
 
 
-def dequantize(qs: Dict[str, jnp.ndarray], n: int) -> jnp.ndarray:
+def dequantize(qs: Dict[str, jnp.ndarray], n: int = None) -> jnp.ndarray:
     q, scale = qs["q"], qs["scale"]
+    n = resolve_n(qs, n)
     qp, _ = _pad_to_block(q.astype(jnp.float32))
     blocks = qp.reshape(qp.shape[:-1] + (-1, BLOCK))
     x = blocks * scale[..., None]
@@ -48,7 +78,8 @@ def zeros_quantized(shape) -> Dict[str, jnp.ndarray]:
     n = shape[-1]
     nb = (n + BLOCK - 1) // BLOCK
     return dict(q=jnp.zeros(shape, jnp.int8),
-                scale=jnp.full(shape[:-1] + (nb,), 1e-12, jnp.float32))
+                scale=jnp.full(shape[:-1] + (nb,), 1e-12, jnp.float32),
+                n=n)
 
 
 # -- log-domain variant for strictly-positive, high-dynamic-range state ------
@@ -64,7 +95,7 @@ def quantize_log(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
     return quantize(jnp.log(jnp.maximum(x, _LOG_FLOOR)))
 
 
-def dequantize_log(qs: Dict[str, jnp.ndarray], n: int) -> jnp.ndarray:
+def dequantize_log(qs: Dict[str, jnp.ndarray], n: int = None) -> jnp.ndarray:
     v = jnp.exp(dequantize(qs, n))
     return jnp.where(v <= _LOG_FLOOR * 1.5, 0.0, v)
 

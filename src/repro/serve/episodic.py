@@ -59,6 +59,7 @@ import dataclasses
 import math
 import os
 import pathlib
+import pickle
 import shutil
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
@@ -74,6 +75,8 @@ from repro.core.lite import LiteSpec
 from repro.core.meta_learners import MetaLearner
 from repro.data.episodic import (bucket_for, collate_task_batch,
                                  iter_query_chunks)
+from repro.serve.quant_params import (dequantize_params, param_bytes,
+                                      quantize_frozen)
 from repro.train.checkpoint import load_array_tree, save_array_tree
 from repro.train.pipeline import BucketedStepCache
 
@@ -202,8 +205,14 @@ class WarmTaskStore:
     per uid (atomic tmp + ``os.replace``), written/read through the
     checkpoint serialization (``save_array_tree``/``load_array_tree``) so
     a rehydrated state is bit-exact to the spilled one.  The abstract
-    template per uid (shapes/dtypes/treedef — tiny) stays host-side; the
-    arrays live on disk.  Scoped to the engine's lifetime, like the L1.
+    template per uid (shapes/dtypes/treedef — tiny) is held host-side AND
+    persisted beside the npz as a pickle sidecar (``uid_N.tmpl.pkl``,
+    atomic tmp + replace), so spilled states survive an engine restart: a
+    fresh store over the same directory rescans the sidecars and serves
+    every surviving uid bit-exactly (``template_restores`` counts them).
+    A sidecar that fails to load is dropped (its uid just re-adapts); a
+    quarantined npz drops its sidecar too, so restart can never resurrect
+    an entry that was ruled corrupt.
 
     Every read verifies the whole-content CRC32 the writer embedded
     (``load_array_tree(verify=True)``); a zero-byte/truncated file fails
@@ -223,17 +232,42 @@ class WarmTaskStore:
         self._templates: Dict[int, PyTree] = {}
         self._fault_plan = fault_plan
         self.quarantined = 0
+        self.template_restores = 0
+        # durable warm tier: rescan template sidecars left by a previous
+        # store over this directory (engine restart) — an unreadable
+        # sidecar is dropped, its uid simply re-adapts
+        for side in sorted(self.dir.glob("uid_*.tmpl.pkl")):
+            try:
+                uid = int(side.name.split(".")[0].split("_", 1)[1])
+                with open(side, "rb") as f:
+                    self._templates[uid] = pickle.load(f)
+                self.template_restores += 1
+            except Exception as e:  # noqa: BLE001 — any unreadable sidecar
+                print(f"warm tier: dropping unreadable template sidecar "
+                      f"{side.name} ({type(e).__name__}: {e})", flush=True)
+                side.unlink(missing_ok=True)
 
     def _path(self, uid: int) -> pathlib.Path:
         return self.dir / f"uid_{uid}.npz"
+
+    def _tmpl_path(self, uid: int) -> pathlib.Path:
+        return self.dir / f"uid_{uid}.tmpl.pkl"
 
     def put(self, uid: int, state: PyTree) -> None:
         tmp = self.dir / f".tmp_uid_{uid}.npz"
         save_array_tree(tmp, state)
         os.replace(tmp, self._path(uid))
-        self._templates[uid] = jax.tree.map(
+        tmpl = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
             state)
+        self._templates[uid] = tmpl
+        # template sidecar AFTER the npz: a crash between the two leaves
+        # an orphan npz that a restarted store simply never lists (safe),
+        # never a template pointing at a half-written payload
+        side_tmp = self.dir / f".tmp_uid_{uid}.tmpl.pkl"
+        with open(side_tmp, "wb") as f:
+            pickle.dump(tmpl, f)
+        os.replace(side_tmp, self._tmpl_path(uid))
         if self._fault_plan is not None:
             spec = self._fault_plan.fire("warm.corrupt", uid)
             if spec is not None:
@@ -245,6 +279,7 @@ class WarmTaskStore:
         path = self._path(uid)
         self.quarantined += 1
         self._templates.pop(uid, None)
+        self._tmpl_path(uid).unlink(missing_ok=True)
         if path.exists():
             aside = self.dir / f"quarantine_uid_{uid}_{self.quarantined}.npz"
             os.replace(path, aside)
@@ -383,7 +418,10 @@ class EpisodicServeEngine:
                  adapt_cost_hint_us: Optional[float] = None,
                  fault_plan=None,
                  max_queue: Optional[int] = None,
-                 deadline_us: Optional[float] = None):
+                 deadline_us: Optional[float] = None,
+                 serve_quant: str = "none",
+                 serve_layout: Optional[str] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         """Fault-tolerance knobs: ``fault_plan`` threads to the store tiers
         (sites ``warm.corrupt`` / ``warm.vanish``); ``max_queue`` bounds
         the admission queue — a submit over the bound is REJECTED with a
@@ -391,13 +429,45 @@ class EpisodicServeEngine:
         growing the queue without bound (admitted requests are never
         dropped); ``deadline_us`` abandons a request whose deadline
         (from ``t_enqueue``) passes before its first logit, freeing the
-        lane/queue slot.  All three default off — behavior unchanged."""
+        lane/queue slot.  All three default off — behavior unchanged.
+
+        Weight-stationary quantized serving: ``serve_quant='int8'``
+        quantizes the learner kind's FROZEN param slice into the blockwise
+        int8 form (``repro.serve.quant_params.quantize_frozen``) —
+        dequantized lazily inside both jitted dispatches, never resident
+        in f32 — and ``stats()`` reports the measured resident parameter
+        bytes.  ``serve_layout`` + ``mesh`` place the serving weights in a
+        named layout from ``repro.roofline.analysis.SERVING_LAYOUTS``
+        (e.g. ``weight_stationary``: contracting dims sharded so the
+        per-step wire carries small activations instead of gathered
+        weights); resolve ``'auto'`` to a concrete name with
+        ``choose_serving_layout`` BEFORE construction (the launcher and
+        benchmarks do) — the engine applies a layout, it does not score
+        one."""
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.learner = learner
         self.params = params
+        # serving weights: the frozen slice quantized (or wrapped as-is
+        # for mode 'none' — the dispatch path is identical either way, so
+        # flipping --serve-quant can never change compile counters)
+        self.serve_quant = serve_quant
+        self._weights = quantize_frozen(learner, params, serve_quant)
+        self._param_bytes = param_bytes(self._weights)
+        self.serve_layout = serve_layout
+        self.mesh = mesh
+        if mesh is not None and serve_layout not in (None, "none"):
+            if serve_layout == "auto":
+                raise ValueError(
+                    "resolve serve_layout='auto' with "
+                    "repro.roofline.analysis.choose_serving_layout before "
+                    "building the engine")
+            from repro.roofline.analysis import serving_shardings
+            self._weights = jax.device_put(
+                self._weights,
+                serving_shardings(self._weights, mesh, serve_layout))
         # serve-time default: exact forward values, chunk-bounded memory
         self.lite = lite if lite is not None else LiteSpec(exact=True,
                                                            chunk_size=32)
@@ -427,13 +497,17 @@ class EpisodicServeEngine:
         # different engine.
         self.kernel_backend = dispatch.resolve_backend(kernel_backend)
 
-        def _adapt_fn(p, batch, keys):
+        def _adapt_fn(sw, batch, keys):
             with dispatch.use_backend(self.kernel_backend):
-                return learner.adapt_batch(p, batch, keys, self.lite)
+                # lazy in-jit dequantize: XLA fuses the int8->f32 expansion
+                # into the step; the f32 weights never persist between steps
+                return learner.adapt_batch(dequantize_params(sw), batch,
+                                           keys, self.lite)
 
-        def _predict_fn(p, states, qx):
+        def _predict_fn(sw, states, qx):
             with dispatch.use_backend(self.kernel_backend):
-                return learner.predict_batch(p, states, qx)
+                return learner.predict_batch(dequantize_params(sw), states,
+                                             qx)
 
         self._adapt = BucketedStepCache(_adapt_fn)
         self._predict = BucketedStepCache(_predict_fn)
@@ -605,7 +679,7 @@ class EpisodicServeEngine:
                 jnp.asarray(uids))
             t0 = self.clock()
             states = jax.block_until_ready(
-                self._adapt(self.params, batch, keys))
+                self._adapt(self._weights, batch, keys))
             t1 = self.clock()
             dt_us = (t1 - t0) * 1e6
             if dt_us > 0:                      # fake clocks may not advance
@@ -660,7 +734,7 @@ class EpisodicServeEngine:
             stacked = stack_task_states(states)
             self._stacked_states = (cohort, stacked)
         logits = np.asarray(
-            self._predict(self.params, stacked, jnp.asarray(qx)))
+            self._predict(self._weights, stacked, jnp.asarray(qx)))
         t_out = self.clock()
         served = 0
         for lane, (i, _, n_real) in enumerate(lanes):
@@ -785,4 +859,11 @@ class EpisodicServeEngine:
             query_p99_us=_pctl(self._query_lat_us, 99),
             adapt_compiles=self._adapt.compile_count,
             predict_compiles=self._predict.compile_count,
+            # measured resident parameter bytes (host accounting over the
+            # stored arrays; int8 engines count q+scale, not f32)
+            param_bytes_resident=self._param_bytes["resident_bytes"],
+            param_bytes_fp32=self._param_bytes["fp32_bytes"],
+            frozen_param_bytes_resident=(
+                self._param_bytes["frozen_resident_bytes"]),
+            frozen_param_bytes_fp32=self._param_bytes["frozen_fp32_bytes"],
         )

@@ -112,6 +112,10 @@ def opt_state_specs(abstract_opt: Any, pspecs_example: Any = None) -> Any:
     def rule(path, leaf):
         p = _path_str(path)
         name = p.split("/")[-1]
+        if name in ("count", "n") or not hasattr(leaf, "shape"):
+            # 'n' is the quantized dict's stored trailing dim (a plain
+            # python int on the host side — no shape to shard).
+            return P()
         if name in ("q", "scale"):
             parent = p.split("/")[-2]
             spec = _param_rule(parent, len(leaf.shape))

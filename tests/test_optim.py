@@ -8,7 +8,9 @@ import pytest
 from repro.optim import (AdamWConfig, adamw_init, adamw_update,
                          clip_by_global_norm, cosine_schedule, wsd_schedule)
 from repro.optim.compress import ef_compress, zeros_error
-from repro.optim.quant import dequantize, quantize
+from repro.optim.quant import (BLOCK, _LOG_FLOOR, dequantize, dequantize_log,
+                               quantize, quantize_log, resolve_n,
+                               zeros_quantized)
 
 
 @pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
@@ -34,6 +36,64 @@ def test_quantize_roundtrip_error_bound(key):
     back = dequantize(q, 300)
     scale = np.asarray(q["scale"]).repeat(128, -1)[..., :300]
     assert float(jnp.max(jnp.abs(back - x))) <= float(scale.max()) + 1e-6
+
+
+@pytest.mark.quant
+@pytest.mark.parametrize("n", [1, 7, BLOCK - 1, BLOCK, BLOCK + 1,
+                               2 * BLOCK, 2 * BLOCK + 37])
+def test_quantize_roundtrip_stored_n(n, key):
+    """Property sweep over non-multiple-of-BLOCK trailing dims: the dict
+    carries ``n``, so no-arg dequantize matches the positional path
+    bit-for-bit, and the roundtrip error stays within one scale step."""
+    x = 2.5 * jax.random.normal(key, (3, n))
+    qs = quantize(x)
+    assert qs["n"] == n and isinstance(qs["n"], int)
+    assert resolve_n(qs) == n
+    back = dequantize(qs)                      # stored-n path
+    back_pos = dequantize(qs, n)               # back-compat positional path
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(back_pos))
+    assert back.shape == x.shape
+    nb = (n + BLOCK - 1) // BLOCK
+    scale = np.asarray(qs["scale"]).repeat(BLOCK, -1)[..., :n]
+    assert qs["scale"].shape == (3, nb)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale.max()) + 1e-6
+
+
+@pytest.mark.quant
+def test_quantize_n_survives_jit_and_legacy_dicts(key):
+    """Crossing a jit boundary turns the stored int into a tracer/array;
+    resolve_n must fall back to q.shape[-1] (always equal to n).  Legacy
+    {q, scale} dicts without ``n`` keep working."""
+    x = jax.random.normal(key, (4, 200))
+    qs = quantize(x)
+    inside = jax.jit(lambda d: dequantize(d))(qs)
+    np.testing.assert_array_equal(np.asarray(inside),
+                                  np.asarray(dequantize(qs)))
+    legacy = dict(q=qs["q"], scale=qs["scale"])        # pre-PR8 form
+    np.testing.assert_array_equal(np.asarray(dequantize(legacy)),
+                                  np.asarray(dequantize(qs, 200)))
+
+
+@pytest.mark.quant
+def test_quantize_zero_blocks_and_log_floor(key):
+    """All-zero input: scale floors at 1e-12 and the roundtrip is exactly
+    zero.  Log domain: zeros roundtrip to exactly zero through the
+    _LOG_FLOOR clamp, and positive values stay multiplicatively close."""
+    z = jnp.zeros((2, BLOCK + 5))
+    qz = quantize(z)
+    assert float(jnp.max(jnp.abs(dequantize(qz)))) == 0.0
+    zq = zeros_quantized((2, BLOCK + 5))
+    assert zq["n"] == BLOCK + 5
+    assert float(jnp.max(jnp.abs(dequantize(zq)))) == 0.0
+
+    v = jnp.concatenate([jnp.zeros((1, 50)),
+                         10.0 ** jax.random.uniform(
+                             key, (1, 50), minval=-9.0, maxval=2.0)], axis=-1)
+    back = dequantize_log(quantize_log(v))
+    np.testing.assert_array_equal(np.asarray(back[:, :50]), 0.0)
+    pos = np.asarray(v[:, 50:])
+    rel = np.abs(np.asarray(back[:, 50:]) - pos) / np.maximum(pos, _LOG_FLOOR)
+    assert rel.max() < 0.25    # log-domain error is multiplicative, bounded
 
 
 def test_ef_compression_error_feedback(key):
