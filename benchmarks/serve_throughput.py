@@ -24,20 +24,155 @@ Four comparisons:
   int8, dequantized lazily in-jit): compile counters must match the fp32
   engine and the ``param_bytes_resident`` column carries the measured
   resident weight bytes of each engine.
+* ``engine_replicas{1,2,4}_{none,int8}`` — the replica-aware router
+  (``repro.serve.replica``) on 4 EMULATED devices (fresh subprocess with
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``, same pattern as
+  benchmarks/dp_scaling.py): 1/2/4 replicas on disjoint
+  ``make_replica_mesh`` device groups, weight-stationary per group, per
+  serve_quant mode.  ``requests_per_step`` is admitted-request throughput
+  per router step (each step steps every replica once — the replica-
+  scaling acceptance row: ~2x from 1 -> 2 replicas) and
+  ``wire_per_replica_bytes`` is ONE replica's per-step predict wire from
+  ``collectives_report`` — it scales with the group's devices, not the
+  deployment (4 replicas x 1 device: zero wire).
 
     PYTHONPATH=src python benchmarks/serve_throughput.py
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 sys.path.insert(0, __file__.rsplit("/", 1)[0])
+
+REPLICA_DEVICES = 4
+
+
+def _replica_worker() -> None:
+    """Replica-scaling sweep, run in the 4-emulated-device subprocess:
+    prints one ``REPLICA_ROWS <json>`` line the parent folds into the
+    shared CSV."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.episodic_train import task_key
+    from repro.core.lite import LiteSpec
+    from repro.core.meta_learners import MetaLearnerConfig, make_learner
+    from repro.core.set_encoder import SetEncoderConfig
+    from repro.data.episodic import (EpisodicImageConfig, collate_task_batch,
+                                     plan_buckets, sample_image_task)
+    from repro.launch.mesh import make_replica_mesh
+    from repro.models.conv_backbone import (ConvBackboneConfig,
+                                            make_conv_backbone)
+    from repro.roofline.analysis import score_serving_layout
+    from repro.serve.episodic import EpisodicRequest
+    from repro.serve.quant_params import dequantize_params, quantize_frozen
+    from repro.serve.replica import ReplicatedServeEngine, uid_replica
+
+    assert len(jax.devices()) == REPLICA_DEVICES, jax.devices()
+    way, shot, query, image = 5, 4, 4, 12
+    backbone = make_conv_backbone(ConvBackboneConfig(widths=(8,),
+                                                     feature_dim=16))
+    learner = make_learner(
+        MetaLearnerConfig(kind="protonets", way=way), backbone,
+        SetEncoderConfig(kind="conv", conv_blocks=1, conv_width=8,
+                         task_dim=16))
+    params = learner.init(jax.random.key(0))
+    lite = LiteSpec(exact=True, chunk_size=32)
+    cfg = EpisodicImageConfig(way=way, shot=shot, query_per_class=query,
+                              image_size=image)
+    buckets = plan_buckets([way * shot], max_buckets=1)
+    n_req = 12
+
+    # uids balanced across all of 1/2/4 replica homes (3 per 4-replica
+    # home; 2 | 4 so the 2-replica split is even too) — the scaling rows
+    # measure the router, not hash luck on a 12-request sample
+    by_home = {r: [] for r in range(4)}
+    u = 0
+    while sum(len(v) for v in by_home.values()) < n_req:
+        h = uid_replica(u, 4)
+        if len(by_home[h]) < n_req // 4:
+            by_home[h].append(u)
+        u += 1
+    uids = sorted(x for v in by_home.values() for x in v)
+
+    def make_requests():
+        return [EpisodicRequest(
+            uid=u,
+            support_x=np.asarray(
+                (t := sample_image_task(jax.random.key(500 + u),
+                                        cfg)).support_x),
+            support_y=np.asarray(t.support_y),
+            query_x=np.asarray(t.query_x), way=way) for u in uids]
+
+    rows = []
+    for replicas in (1, 2, 4):
+        dpr = REPLICA_DEVICES // replicas
+        meshes = make_replica_mesh(replicas, dpr)
+        # one replica group's per-step predict wire (weight_stationary):
+        # the group IS the collective domain, so this is what EACH
+        # replica pays regardless of how many replicas exist
+        probe = [sample_image_task(jax.random.key(i), cfg)
+                 for i in range(2)]
+        pbatch = collate_task_batch(probe, support_size=max(buckets),
+                                    query_size=probe[0].query_x.shape[0])
+        pkeys = jax.vmap(lambda i: task_key(jax.random.key(0), i))(
+            jnp.arange(2))
+        for quant in ("none", "int8"):
+            sw = quantize_frozen(learner, params, quant)
+            states = learner.adapt_batch(dequantize_params(sw), pbatch,
+                                         pkeys, lite)
+            wire = score_serving_layout(
+                lambda w, st, qx: learner.predict_batch(
+                    dequantize_params(w), st, qx),
+                sw, (states, pbatch.query_x), meshes[0],
+                "weight_stationary")["wire_bytes"]
+
+            router = ReplicatedServeEngine(
+                learner, params, replicas=replicas, meshes=meshes,
+                serve_layout="weight_stationary", serve_quant=quant,
+                lite=lite, n_slots=1, query_chunk=8,
+                support_buckets=buckets, cache_capacity=n_req)
+            reqs = make_requests()
+            for r in reqs:
+                router.submit(r)
+            t0 = time.perf_counter()
+            steps = 0
+            while router.busy:
+                router.step()
+                steps += 1
+            dt = time.perf_counter() - t0
+            s = router.stats()
+            assert s["tasks_adapted"] == n_req
+            n_queries = sum(r.n_queries for r in reqs)
+            rows.append(dict(
+                mode=f"engine_replicas{replicas}_{quant}", tasks=n_req,
+                replicas=replicas, devices_per_replica=dpr,
+                requests_per_step=round(n_req / steps, 3),
+                tasks_per_sec=round(n_req / dt, 1),
+                queries_per_sec=round(n_queries / dt, 1),
+                hit_rate=round(s["hit_rate"], 3),
+                adapt_compiles=int(s["adapt_compiles"]),
+                predict_compiles=int(s["predict_compiles"]),
+                param_bytes_resident=int(s["param_bytes_resident"]),
+                wire_per_replica_bytes=round(wire, 1),
+                quarantined=0, rejections=0, deadline_abandoned=0))
+    print("REPLICA_ROWS " + json.dumps(rows), flush=True)
+
+
+if os.environ.get("SERVE_REPLICA_WORKER"):  # pragma: no cover - subprocess
+    _replica_worker()
+    sys.exit(0)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
 from common import emit, time_median  # noqa: E402
 
 from repro.core.episodic import index_task_state, stack_task_states
@@ -50,6 +185,28 @@ from repro.data.episodic import (EpisodicImageConfig, collate_task_batch,
 from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
 from repro.serve.episodic import (EpisodicRequest, EpisodicServeEngine,
                                   WarmTaskStore, _pctl)
+
+
+def _replica_rows() -> list:
+    """Re-exec this file with 4 emulated devices (XLA_FLAGS must precede
+    jax init) and collect the replica-scaling rows."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count="
+                        f"{REPLICA_DEVICES}").strip()
+    env["SERVE_REPLICA_WORKER"] = "1"
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [str(__file__).rsplit("/", 2)[0] + "/src",
+                    env.get("PYTHONPATH", "")] if p)
+    r = subprocess.run([sys.executable, __file__], env=env,
+                       capture_output=True, text=True)
+    if r.returncode:
+        raise RuntimeError(f"replica worker failed ({r.returncode}):\n"
+                           f"{r.stderr[-3000:]}")
+    for line in r.stdout.splitlines():
+        if line.startswith("REPLICA_ROWS "):
+            return json.loads(line[len("REPLICA_ROWS "):])
+    raise RuntimeError("replica worker produced no REPLICA_ROWS line")
 
 
 def main() -> None:
@@ -99,7 +256,12 @@ def main() -> None:
                     param_bytes_resident=r.get("param_bytes_resident", ""),
                     quarantined=r.get("quarantined", ""),
                     rejections=r.get("rejections", ""),
-                    deadline_abandoned=r.get("deadline_abandoned", ""))
+                    deadline_abandoned=r.get("deadline_abandoned", ""),
+                    replicas=r.get("replicas", ""),
+                    devices_per_replica=r.get("devices_per_replica", ""),
+                    requests_per_step=r.get("requests_per_step", ""),
+                    wire_per_replica_bytes=r.get("wire_per_replica_bytes",
+                                                 ""))
 
     rows = []
 
@@ -278,7 +440,22 @@ def main() -> None:
                            wall_us=round(1e6 * t_rehydrate),
                            speedup=round(t_readapt / t_rehydrate, 2))))
 
+    # -- replica scaling on 4 emulated devices (fresh subprocess) ------------
+    rep_rows = [blank(r) for r in _replica_rows()]
+    rows.extend(rep_rows)
+
     emit(rows, "serve_throughput")
+    by_mode = {r["mode"]: r for r in rep_rows}
+    r1 = by_mode["engine_replicas1_none"]
+    r2 = by_mode["engine_replicas2_none"]
+    print(f"# replica scaling (4 emulated devices): requests/step "
+          f"{r1['requests_per_step']} -> {r2['requests_per_step']} "
+          f"(x{r2['requests_per_step'] / r1['requests_per_step']:.2f} at 2 "
+          f"replicas); per-replica predict wire "
+          f"{r1['wire_per_replica_bytes']} B (4 dev) -> "
+          f"{r2['wire_per_replica_bytes']} B (2-dev group) -> "
+          f"{by_mode['engine_replicas4_none']['wire_per_replica_bytes']} B "
+          f"(1-dev group)")
     print(f"# warm-tier rehydrate vs fomaml re-adapt: "
           f"{t_readapt / t_rehydrate:.2f}x cheaper "
           f"({1e6 * t_readapt:.0f} vs {1e6 * t_rehydrate:.0f} us)")

@@ -8,6 +8,16 @@ adaptation entirely), and micro-batches the queries of every live task
 into one dispatch per step.
 
     PYTHONPATH=src python examples/serve_episodic.py --learner protonets
+
+``--replicas R`` serves the same traffic through the replica-aware router
+(``repro.serve.replica.ReplicatedServeEngine``): R engines, each with a
+full weight copy and its own L1 state cache, with requests routed by a
+stable uid hash — the horizontal-scaling story at "millions of users".
+On one device the replicas share it (routing/caching semantics are
+identical); emulate real disjoint device groups with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``:
+
+    PYTHONPATH=src python examples/serve_episodic.py --replicas 2
 """
 import argparse
 import time
@@ -31,6 +41,10 @@ def main() -> None:
     ap.add_argument("--users", type=int, default=6)
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--shot", type=int, default=8)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through the replica-aware router: uid-hash "
+                         "routing over N engines, each with its own weight "
+                         "copy and L1 cache (default: 1 — single engine)")
     args = ap.parse_args()
 
     backbone = make_conv_backbone(ConvBackboneConfig(widths=(8, 16),
@@ -58,11 +72,16 @@ def main() -> None:
                             query_x=np.asarray(tasks[i % args.users].query_x))
             for i in range(max(args.requests - args.users, 0))]
 
-    engine = EpisodicServeEngine(
-        learner, params,
+    engine_kw = dict(
         lite=LiteSpec(exact=True, chunk_size=16),   # O(chunk) adapt memory
         n_slots=4, query_chunk=8, support_buckets=(64,),
         cache_capacity=args.users)
+    if args.replicas > 1:
+        from repro.serve.replica import ReplicatedServeEngine
+        engine = ReplicatedServeEngine(learner, params,
+                                       replicas=args.replicas, **engine_kw)
+    else:
+        engine = EpisodicServeEngine(learner, params, **engine_kw)
     t0 = time.time()
     engine.run_to_completion(cold)
     engine.run_to_completion(warm)
@@ -81,6 +100,11 @@ def main() -> None:
           f"{s['query_p50_us']:.0f}/{s['query_p99_us']:.0f} us "
           f"(set warm_dir= to spill evicted states to disk instead of "
           f"re-adapting)")
+    if args.replicas > 1:
+        for i, p in enumerate(s["per_replica"]):
+            print(f"  replica {i}: adapted={p['tasks_adapted']:.0f} "
+                  f"queries={p['queries_served']:.0f} "
+                  f"hit_rate={p['hit_rate']:.2f}")
     for r in reqs[: args.users + 2]:
         print(f"  uid={r.uid} cache_hit={r.cache_hit} "
               f"preds={r.predictions().tolist()}")

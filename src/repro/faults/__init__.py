@@ -25,15 +25,16 @@ import signal as _signal
 from typing import Optional, Sequence
 
 from repro.faults.plan import (ALL_SITES, CKPT_PRE_COMMIT, CKPT_PRE_REPLACE,
-                               DATA_NAN, DATA_TRANSIENT, TRAIN_PREEMPT,
-                               TRAIN_STRAGGLER, WARM_CORRUPT, WARM_VANISH,
-                               FaultPlan, FaultSpec, InjectedKill,
-                               TransientDataError, advance_clock)
+                               DATA_NAN, DATA_TRANSIENT, REPLICA_DEAD,
+                               TRAIN_PREEMPT, TRAIN_STRAGGLER, WARM_CORRUPT,
+                               WARM_VANISH, FaultPlan, FaultSpec,
+                               InjectedKill, TransientDataError,
+                               advance_clock)
 
 __all__ = [
     "ALL_SITES", "CKPT_PRE_COMMIT", "CKPT_PRE_REPLACE", "DATA_NAN",
-    "DATA_TRANSIENT", "TRAIN_PREEMPT", "TRAIN_STRAGGLER", "WARM_CORRUPT",
-    "WARM_VANISH", "FaultPlan", "FaultSpec", "InjectedKill",
+    "DATA_TRANSIENT", "REPLICA_DEAD", "TRAIN_PREEMPT", "TRAIN_STRAGGLER",
+    "WARM_CORRUPT", "WARM_VANISH", "FaultPlan", "FaultSpec", "InjectedKill",
     "TransientDataError", "advance_clock", "PreemptionSignal",
 ]
 

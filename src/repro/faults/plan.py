@@ -30,10 +30,17 @@ Sites (the injection points wired through the stack):
                             bit-rot) — drives quarantine + re-adapt
 ``warm.vanish``             remove the warm directory before a spill
                             (tmpfs cleanup) — drives L1-only degradation
+``replica.dead``            a serving replica group dies mid-run (host
+                            loss / device failure): the replica router
+                            quarantines the group and re-routes its
+                            unfinished uids to the surviving replicas —
+                            warm-tier state rehydrates bit-exactly where
+                            it had spilled, the rest re-adapts cold
 ==========================  ================================================
 
 ``at`` is the site's natural index — the step for training sites, the task
-uid for warm-tier sites (``None`` matches any index).  ``count`` bounds how
+uid for warm-tier sites, the replica index for ``replica.dead`` (``None``
+matches any index).  ``count`` bounds how
 many times a spec fires: a transient error with ``count=2`` fails twice and
 then heals, which is exactly what a bounded-retry test needs.  Every firing
 is recorded in ``plan.fired`` for assertions.
@@ -55,9 +62,11 @@ CKPT_PRE_COMMIT = "ckpt.pre_commit"
 CKPT_PRE_REPLACE = "ckpt.pre_replace"
 WARM_CORRUPT = "warm.corrupt"
 WARM_VANISH = "warm.vanish"
+REPLICA_DEAD = "replica.dead"
 
 ALL_SITES = (DATA_NAN, DATA_TRANSIENT, TRAIN_PREEMPT, TRAIN_STRAGGLER,
-             CKPT_PRE_COMMIT, CKPT_PRE_REPLACE, WARM_CORRUPT, WARM_VANISH)
+             CKPT_PRE_COMMIT, CKPT_PRE_REPLACE, WARM_CORRUPT, WARM_VANISH,
+             REPLICA_DEAD)
 
 
 class TransientDataError(RuntimeError):

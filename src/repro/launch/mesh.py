@@ -49,6 +49,40 @@ def make_dp_mesh(shards: int, axis: str = "data"):
     return Mesh(np.asarray(devices[:shards]), (axis,))
 
 
+def make_replica_mesh(replicas: int, devices_per_replica: int,
+                      axis: str = "serve"):
+    """Disjoint per-replica serving meshes for the replicated episodic
+    engine (``repro.serve.replica.ReplicatedServeEngine``).
+
+    Returns a list of ``replicas`` 1-D meshes, each over its own
+    contiguous ``devices_per_replica``-device group of ``jax.devices()``
+    (process-major, so groups align with hosts on a real multi-host
+    deployment).  The groups are DISJOINT by construction: weights placed
+    on replica r's mesh are stationary within group r, and any collective
+    a program compiled on that mesh emits is intra-group — there is no
+    axis spanning two groups to communicate over.  This is the serving
+    analogue of ``scaling_transformer_inference_efficiency``'s partitioned
+    serving groups: weights replicated per group, work (here: the task
+    population, routed by uid hash) partitioned across groups."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    if devices_per_replica < 1:
+        raise ValueError(f"devices_per_replica must be >= 1, got "
+                         f"{devices_per_replica}")
+    devices = jax.devices()
+    need = replicas * devices_per_replica
+    if need > len(devices):
+        raise ValueError(
+            f"replicas*devices_per_replica = {replicas}*{devices_per_replica}"
+            f" = {need} but only {len(devices)} device(s) are visible; "
+            f"{_EMULATE_HINT}")
+    grid = np.asarray(devices[:need]).reshape(replicas, devices_per_replica)
+    return [Mesh(grid[r], (axis,)) for r in range(replicas)]
+
+
 def make_two_level_dp_mesh(dcn_shards: int, dp_shards: int,
                            dcn_axis: str = "dcn", axis: str = "data"):
     """Two-level data-parallel mesh for the task-batched engine: an outer

@@ -27,6 +27,15 @@ measured), micro-batched query dispatch, and the aggregation kernels
         --repeat-frac 0.5 --lite-chunk 32 --cache-capacity 4 \
         --warm-dir /tmp/warm_states --query-slo-us 50000
 
+``--replicas R`` scales the same engine horizontally (R engines on
+disjoint device groups, uid-hash routing, shared sharded warm tier —
+``repro.serve.replica``); with ``--serve-layout auto`` the roofline
+chooser scores ONE replica group and the winner applies to all:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    PYTHONPATH=src python -m repro.launch.serve --episodic \
+        --replicas 2 --serve-layout auto --serve-quant int8 --requests 16
+
 Runs the smoke config on this container; on a TPU slice the same engines
 serve the full config (params sharded by repro.sharding.rules — see
 EXPERIMENTS.md §Perf cell 2 for the topology guidance: size the slice so
@@ -87,17 +96,26 @@ def run_episodic(args) -> None:
     buckets = plan_buckets([r.support_x.shape[0] for r in reqs],
                            max_buckets=2)
 
-    # weight-stationary serving layout: build a 1-D mesh over all local
-    # devices and either honor an explicit layout name or let the roofline
-    # chooser score every candidate on the compiled predict step
-    serve_layout, mesh, layout_rows = args.serve_layout, None, None
-    if serve_layout != "none" and len(jax.devices()) > 1:
-        mesh = jax.make_mesh((len(jax.devices()),), ("serve",))
+    # weight-stationary serving layout: build a 1-D mesh (with --replicas
+    # R > 1: R disjoint group meshes, each over len(devices)//R devices)
+    # and either honor an explicit layout name or let the roofline chooser
+    # score every candidate on the compiled predict step (one replica
+    # group prices them all — the groups are congruent)
+    replicas = args.replicas
+    serve_layout, meshes, layout_rows = args.serve_layout, None, None
+    multi_dev = len(jax.devices()) >= max(2, replicas)
+    if serve_layout != "none" and multi_dev:
+        if replicas > 1:
+            from repro.launch.mesh import make_replica_mesh
+            meshes = make_replica_mesh(replicas,
+                                       len(jax.devices()) // replicas)
+        else:
+            meshes = [jax.make_mesh((len(jax.devices()),), ("serve",))]
         if serve_layout == "auto":
             import jax.numpy as jnp
             from repro.core.episodic_train import task_key
             from repro.data.episodic import collate_task_batch
-            from repro.roofline.analysis import choose_serving_layout
+            from repro.roofline.analysis import choose_replica_serving_layout
             from repro.serve.quant_params import (dequantize_params,
                                                   quantize_frozen)
             sw = quantize_frozen(learner, params, args.serve_quant)
@@ -110,29 +128,36 @@ def run_episodic(args) -> None:
                 jnp.arange(2))
             states = learner.adapt_batch(dequantize_params(sw), batch,
                                          keys, lite)
-            pick = choose_serving_layout(
+            pick = choose_replica_serving_layout(
                 lambda w, st, qx: learner.predict_batch(
                     dequantize_params(w), st, qx),
-                sw, (states, batch.query_x), mesh)
+                sw, (states, batch.query_x), meshes)
             serve_layout, layout_rows = pick["choice"], pick["rows"]
     elif serve_layout == "auto":
         serve_layout = "none"               # single device: nothing to place
 
-    engine = EpisodicServeEngine(learner, params, lite=lite,
-                                 n_slots=args.slots,
-                                 query_chunk=args.query_chunk,
-                                 support_buckets=buckets,
-                                 kernel_backend=args.kernel_backend,
-                                 cache_capacity=args.cache_capacity,
-                                 warm_dir=args.warm_dir,
-                                 query_slo_us=args.query_slo_us,
-                                 adapt_cost_hint_us=args.adapt_cost_hint_us,
-                                 max_queue=args.max_queue,
-                                 deadline_us=args.deadline_us,
-                                 serve_quant=args.serve_quant,
-                                 serve_layout=(None if serve_layout == "none"
-                                               else serve_layout),
-                                 mesh=mesh)
+    engine_kw = dict(lite=lite, n_slots=args.slots,
+                     query_chunk=args.query_chunk,
+                     support_buckets=buckets,
+                     kernel_backend=args.kernel_backend,
+                     cache_capacity=args.cache_capacity,
+                     warm_dir=args.warm_dir,
+                     query_slo_us=args.query_slo_us,
+                     adapt_cost_hint_us=args.adapt_cost_hint_us,
+                     max_queue=args.max_queue,
+                     deadline_us=args.deadline_us,
+                     serve_quant=args.serve_quant,
+                     serve_layout=(None if serve_layout == "none"
+                                   else serve_layout))
+    if replicas > 1:
+        from repro.serve.replica import ReplicatedServeEngine
+        engine = ReplicatedServeEngine(learner, params, replicas=replicas,
+                                       meshes=meshes,
+                                       warm_shards=args.warm_shards,
+                                       **engine_kw)
+    else:
+        engine = EpisodicServeEngine(
+            learner, params, mesh=meshes[0] if meshes else None, **engine_kw)
     # cold wave first so every warm request finds its user's state cached
     # regardless of slot count — warm traffic measures the cache, not
     # admission-wave luck
@@ -172,6 +197,16 @@ def run_episodic(args) -> None:
         for lo, r in layout_rows.items():
             print(f"    layout {lo:18s} wire={r['wire_bytes']:12.0f} B "
                   f"bottleneck={r['bottleneck']}")
+    if replicas > 1:
+        print(f"  replicas: {s['live_replicas']}/{s['n_replicas']} live, "
+              f"failovers={s['replica_failovers']} "
+              f"rerouted={s['rerouted_requests']}")
+        for i, p in enumerate(s["per_replica"]):
+            print(f"    replica {i}: adapted={p['tasks_adapted']:.0f} "
+                  f"queries={p['queries_served']:.0f} "
+                  f"hit_rate={p['hit_rate']:.2f} "
+                  f"compiles adapt={p['adapt_compiles']:.0f} "
+                  f"predict={p['predict_compiles']:.0f}")
     for r in reqs[:4]:
         print(f"  req uid={r.uid}: cache_hit={r.cache_hit} "
               f"preds={r.predictions()[:8].tolist()}")
@@ -249,6 +284,22 @@ def main() -> None:
                          "the ZeRO-ish weight-gathered train placement, "
                          "replicated = every chip holds all weights "
                          "(default: none — single-device placement)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serving replicas (repro.serve.replica): each "
+                         "replica owns a full copy of the serving weights "
+                         "pinned to its own disjoint device group "
+                         "(len(devices)//replicas devices each, "
+                         "make_replica_mesh) and its own L1 state cache; "
+                         "requests route by stable uid hash, the shared "
+                         "--warm-dir is partitioned into uid-hash shard "
+                         "subdirs, and no predict-step collective ever "
+                         "crosses a group (default: 1 — single engine)")
+    ap.add_argument("--warm-shards", type=int, default=None,
+                    help="uid-hash shard subdirs under --warm-dir for the "
+                         "replicated path (default: 8; keep it FIXED "
+                         "across deployments of the same warm root — "
+                         "resizing --replicas re-routes uids but never "
+                         "moves their warm files)")
     ap.add_argument("--kernel-backend",
                     choices=["ref", "pallas", "auto", "naive"],
                     default="ref",

@@ -272,3 +272,27 @@ def choose_serving_layout(fn, weights, args, mesh,
             for lo in layouts}
     choice = min(layouts, key=lambda lo: rows[lo]["score"])
     return dict(choice=choice, rows=rows)
+
+
+def choose_replica_serving_layout(fn, weights, args, replica_meshes,
+                                  layouts=SERVING_LAYOUTS) -> Dict:
+    """Layout choice for a multi-replica deployment: score on ONE replica
+    group and apply the winner to all of them.
+
+    The replica groups from ``make_replica_mesh`` are congruent — same
+    device count, same axis, same (replicated) weights — so the compiled
+    program, and therefore the roofline score, is identical on every
+    group; scoring ``replica_meshes[0]`` prices them all.  The scoring is
+    correctly SUBGROUP-scoped by construction: the candidate is compiled
+    on the group's own mesh, so every collective the score charges for is
+    intra-group wire — exactly what the deployment pays per replica, with
+    zero inter-group terms (there is no axis spanning two groups to
+    communicate over).  Returns :func:`choose_serving_layout`'s dict plus
+    ``per_replica_wire_bytes`` (== the winning row's wire bytes: the
+    per-step wire EACH replica pays, not a deployment total)."""
+    if not replica_meshes:
+        raise ValueError("replica_meshes must be non-empty")
+    out = choose_serving_layout(fn, weights, args, replica_meshes[0],
+                                layouts=layouts)
+    out["per_replica_wire_bytes"] = out["rows"][out["choice"]]["wire_bytes"]
+    return out

@@ -62,6 +62,7 @@ import pathlib
 import pickle
 import shutil
 import time
+import zlib
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
 import jax
@@ -76,11 +77,21 @@ from repro.core.meta_learners import MetaLearner
 from repro.data.episodic import (bucket_for, collate_task_batch,
                                  iter_query_chunks)
 from repro.serve.quant_params import (dequantize_params, param_bytes,
-                                      quantize_frozen)
+                                      place_serving_weights, quantize_frozen)
 from repro.train.checkpoint import load_array_tree, save_array_tree
 from repro.train.pipeline import BucketedStepCache
 
 PyTree = Any
+
+
+def stable_uid_hash(uid: int) -> int:
+    """Process-stable hash of a task uid (crc32 of its 8-byte encoding).
+
+    Python's builtin ``hash`` is salted per process; routing and warm-dir
+    sharding both need a uid -> integer map that agrees across engine
+    restarts and across replica processes, so repeat visitors always land
+    on the replica (and warm subdir) holding their state."""
+    return zlib.crc32(int(uid).to_bytes(8, "little", signed=True))
 
 
 def _pctl(xs: Sequence[float], q: float) -> float:
@@ -214,6 +225,21 @@ class WarmTaskStore:
     quarantined npz drops its sidecar too, so restart can never resurrect
     an entry that was ruled corrupt.
 
+    **Sharded layout + cross-process safety** (the multi-replica serving
+    contract): with ``shards > 1`` each uid's files live in the uid-hash
+    subdir ``shard_{stable_uid_hash(uid) % shards}`` — a pure function of
+    the uid, so every store over the same directory (one per serving
+    replica) agrees on where a uid lives without coordination, and
+    replicas whose routed uid sets map to disjoint shards never contend
+    on a subdir.  The template index is no longer frozen at construction:
+    a ``get``/``in`` miss *rescans* the uid's canonical sidecar path (and,
+    defensively, every shard subdir) before giving up, so a uid spilled by
+    replica A AFTER replica B's startup scan is still found by B — the
+    post-failover rehydration path (``rescan_hits`` counts these late
+    finds).  Entries written under a different shard count remain
+    loadable: the rescan walks all subdirs, and a later ``put`` migrates
+    the files to the canonical shard.
+
     Every read verifies the whole-content CRC32 the writer embedded
     (``load_array_tree(verify=True)``); a zero-byte/truncated file fails
     earlier inside ``np.load``.  ANY read failure — bad zip, checksum
@@ -226,48 +252,101 @@ class WarmTaskStore:
     fired at a uid's ``put``, the just-published npz is truncated to
     ``payload`` bytes — crash-mid-write residue, deterministically."""
 
-    def __init__(self, directory: str | pathlib.Path, fault_plan=None):
+    def __init__(self, directory: str | pathlib.Path, fault_plan=None,
+                 shards: int = 1):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
         self.dir = pathlib.Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
+        self.shards = int(shards)
         self._templates: Dict[int, PyTree] = {}
+        # where each known uid's files actually live (its subdir) — equals
+        # the canonical shard dir except for entries written under a
+        # different shard count and not yet migrated by a fresh put
+        self._homes: Dict[int, pathlib.Path] = {}
         self._fault_plan = fault_plan
         self.quarantined = 0
         self.template_restores = 0
+        self.rescan_hits = 0
         # durable warm tier: rescan template sidecars left by a previous
         # store over this directory (engine restart) — an unreadable
         # sidecar is dropped, its uid simply re-adapts
-        for side in sorted(self.dir.glob("uid_*.tmpl.pkl")):
-            try:
-                uid = int(side.name.split(".")[0].split("_", 1)[1])
-                with open(side, "rb") as f:
-                    self._templates[uid] = pickle.load(f)
+        for side in sorted(self.dir.glob("uid_*.tmpl.pkl")) + \
+                sorted(self.dir.glob("shard_*/uid_*.tmpl.pkl")):
+            if self._load_sidecar(side):
                 self.template_restores += 1
-            except Exception as e:  # noqa: BLE001 — any unreadable sidecar
-                print(f"warm tier: dropping unreadable template sidecar "
-                      f"{side.name} ({type(e).__name__}: {e})", flush=True)
-                side.unlink(missing_ok=True)
+
+    def _load_sidecar(self, side: pathlib.Path) -> bool:
+        try:
+            uid = int(side.name.split(".")[0].split("_", 1)[1])
+            with open(side, "rb") as f:
+                self._templates[uid] = pickle.load(f)
+            self._homes[uid] = side.parent
+            return True
+        except Exception as e:  # noqa: BLE001 — any unreadable sidecar
+            print(f"warm tier: dropping unreadable template sidecar "
+                  f"{side.name} ({type(e).__name__}: {e})", flush=True)
+            side.unlink(missing_ok=True)
+            return False
+
+    def _shard_dir(self, uid: int) -> pathlib.Path:
+        """Canonical subdir for ``uid`` — a pure function of (uid, shards),
+        so independent stores over the same directory agree on it."""
+        if self.shards == 1:
+            return self.dir
+        return self.dir / f"shard_{stable_uid_hash(uid) % self.shards}"
+
+    def _home(self, uid: int) -> pathlib.Path:
+        return self._homes.get(uid, self._shard_dir(uid))
 
     def _path(self, uid: int) -> pathlib.Path:
-        return self.dir / f"uid_{uid}.npz"
+        return self._home(uid) / f"uid_{uid}.npz"
 
     def _tmpl_path(self, uid: int) -> pathlib.Path:
-        return self.dir / f"uid_{uid}.tmpl.pkl"
+        return self._home(uid) / f"uid_{uid}.tmpl.pkl"
+
+    def _rescan(self, uid: int) -> bool:
+        """Rescan-on-miss: look for ``uid``'s sidecar written AFTER this
+        store's startup scan (another replica's spill — the post-failover
+        rehydration path).  Canonical shard path first, then every shard
+        subdir and the root (entries from a different shard count)."""
+        candidates = [self._shard_dir(uid) / f"uid_{uid}.tmpl.pkl",
+                      self.dir / f"uid_{uid}.tmpl.pkl"]
+        candidates += sorted(self.dir.glob(f"shard_*/uid_{uid}.tmpl.pkl"))
+        for side in candidates:
+            if side.exists() and self._load_sidecar(side):
+                self.rescan_hits += 1
+                return True
+        return False
 
     def put(self, uid: int, state: PyTree) -> None:
-        tmp = self.dir / f".tmp_uid_{uid}.npz"
+        home = self._shard_dir(uid)
+        if home != self.dir:
+            # parents=False: a vanished warm ROOT must stay an OSError for
+            # the caller (warm.vanish degrades to L1-only), never be
+            # silently recreated here
+            home.mkdir(exist_ok=True)
+        old_home = self._homes.get(uid)
+        tmp = home / f".tmp_uid_{uid}.npz"
         save_array_tree(tmp, state)
-        os.replace(tmp, self._path(uid))
+        os.replace(tmp, home / f"uid_{uid}.npz")
         tmpl = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
             state)
         self._templates[uid] = tmpl
+        self._homes[uid] = home
         # template sidecar AFTER the npz: a crash between the two leaves
         # an orphan npz that a restarted store simply never lists (safe),
         # never a template pointing at a half-written payload
-        side_tmp = self.dir / f".tmp_uid_{uid}.tmpl.pkl"
+        side_tmp = home / f".tmp_uid_{uid}.tmpl.pkl"
         with open(side_tmp, "wb") as f:
             pickle.dump(tmpl, f)
-        os.replace(side_tmp, self._tmpl_path(uid))
+        os.replace(side_tmp, home / f"uid_{uid}.tmpl.pkl")
+        if old_home is not None and old_home != home:
+            # migrated from a stale shard layout: drop the old files so a
+            # directory-walking rescan can never resurrect the stale copy
+            (old_home / f"uid_{uid}.npz").unlink(missing_ok=True)
+            (old_home / f"uid_{uid}.tmpl.pkl").unlink(missing_ok=True)
         if self._fault_plan is not None:
             spec = self._fault_plan.fire("warm.corrupt", uid)
             if spec is not None:
@@ -278,19 +357,21 @@ class WarmTaskStore:
     def _quarantine(self, uid: int, err: Exception) -> None:
         path = self._path(uid)
         self.quarantined += 1
-        self._templates.pop(uid, None)
         self._tmpl_path(uid).unlink(missing_ok=True)
+        self._templates.pop(uid, None)
         if path.exists():
-            aside = self.dir / f"quarantine_uid_{uid}_{self.quarantined}.npz"
+            aside = path.parent / \
+                f"quarantine_uid_{uid}_{self.quarantined}.npz"
             os.replace(path, aside)
             where = f"moved aside to {aside.name}"
         else:
             where = "file already gone"
+        self._homes.pop(uid, None)
         print(f"warm tier: quarantined uid={uid} ({type(err).__name__}: "
               f"{err}; {where})", flush=True)
 
     def get(self, uid: int) -> Optional[PyTree]:
-        if uid not in self._templates:
+        if uid not in self._templates and not self._rescan(uid):
             return None
         if not self._path(uid).exists():
             self._quarantine(uid, FileNotFoundError(str(self._path(uid))))
@@ -303,7 +384,9 @@ class WarmTaskStore:
             return None
 
     def __contains__(self, uid: int) -> bool:
-        return uid in self._templates and self._path(uid).exists()
+        if uid not in self._templates and not self._rescan(uid):
+            return False
+        return self._path(uid).exists()
 
     def __len__(self) -> int:
         return sum(1 for uid in self._templates if self._path(uid).exists())
@@ -328,8 +411,9 @@ class TwoTierTaskStore:
 
     def __init__(self, capacity: int = 64,
                  warm_dir: Optional[str | pathlib.Path] = None,
-                 fault_plan=None):
-        self.warm = (WarmTaskStore(warm_dir, fault_plan=fault_plan)
+                 fault_plan=None, warm_shards: int = 1):
+        self.warm = (WarmTaskStore(warm_dir, fault_plan=fault_plan,
+                                   shards=warm_shards)
                      if warm_dir is not None else None)
         self.l1 = TaskStateCache(capacity, on_evict=self._spill)
         self._fault_plan = fault_plan
@@ -341,6 +425,10 @@ class TwoTierTaskStore:
     @property
     def quarantined(self) -> int:
         return self.warm.quarantined if self.warm is not None else 0
+
+    @property
+    def rescan_hits(self) -> int:
+        return self.warm.rescan_hits if self.warm is not None else 0
 
     def _warm_live(self) -> bool:
         return self.warm is not None and not self.warm_disabled
@@ -421,7 +509,8 @@ class EpisodicServeEngine:
                  deadline_us: Optional[float] = None,
                  serve_quant: str = "none",
                  serve_layout: Optional[str] = None,
-                 mesh: Optional[jax.sharding.Mesh] = None):
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 warm_shards: int = 1):
         """Fault-tolerance knobs: ``fault_plan`` threads to the store tiers
         (sites ``warm.corrupt`` / ``warm.vanish``); ``max_queue`` bounds
         the admission queue — a submit over the bound is REJECTED with a
@@ -443,7 +532,14 @@ class EpisodicServeEngine:
         weights); resolve ``'auto'`` to a concrete name with
         ``choose_serving_layout`` BEFORE construction (the launcher and
         benchmarks do) — the engine applies a layout, it does not score
-        one."""
+        one.  In a multi-replica deployment ``mesh`` is the replica's OWN
+        disjoint device group (``make_replica_mesh``): weights are
+        stationary within the group and no predict-step collective ever
+        crosses it.
+
+        ``warm_shards`` partitions the warm directory into uid-hash
+        subdirs (see :class:`WarmTaskStore`) — replicas sharing one warm
+        root spill/rehydrate without contending on a subdir."""
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         if max_queue is not None and max_queue < 1:
@@ -458,16 +554,8 @@ class EpisodicServeEngine:
         self._param_bytes = param_bytes(self._weights)
         self.serve_layout = serve_layout
         self.mesh = mesh
-        if mesh is not None and serve_layout not in (None, "none"):
-            if serve_layout == "auto":
-                raise ValueError(
-                    "resolve serve_layout='auto' with "
-                    "repro.roofline.analysis.choose_serving_layout before "
-                    "building the engine")
-            from repro.roofline.analysis import serving_shardings
-            self._weights = jax.device_put(
-                self._weights,
-                serving_shardings(self._weights, mesh, serve_layout))
+        self._weights = place_serving_weights(self._weights, mesh,
+                                              serve_layout)
         # serve-time default: exact forward values, chunk-bounded memory
         self.lite = lite if lite is not None else LiteSpec(exact=True,
                                                            chunk_size=32)
@@ -475,7 +563,8 @@ class EpisodicServeEngine:
         self.query_chunk = query_chunk
         self.support_buckets = tuple(sorted(support_buckets))
         self.store = TwoTierTaskStore(cache_capacity, warm_dir,
-                                      fault_plan=fault_plan)
+                                      fault_plan=fault_plan,
+                                      warm_shards=warm_shards)
         self.clock = clock if clock is not None else time.monotonic
         self.query_slo_us = query_slo_us
         self.max_queue = max_queue
@@ -814,6 +903,28 @@ class EpisodicServeEngine:
             steps += 1
         return requests
 
+    def drain_unfinished(self) -> List[EpisodicRequest]:
+        """Remove and return every request this engine still owes logits —
+        live lanes first (slot order == admission order), then the queue
+        FIFO — leaving the engine empty.  The replica-failover hook: when
+        a replica group dies, the router drains the dead engine and
+        re-routes its unfinished requests to the survivors (the warm tier
+        makes spilled state rehydratable there; the rest re-adapts)."""
+        out: List[EpisodicRequest] = []
+        for i, s in enumerate(self._slots):
+            if s is not None:
+                out.append(s.req)
+                self._slots[i] = None
+        out.extend(self._queue)
+        self._queue.clear()
+        self._stacked_states = None
+        return out
+
+    @property
+    def busy(self) -> bool:
+        """True while any request is queued or live in a slot."""
+        return bool(self._queue) or any(s is not None for s in self._slots)
+
     # -- observability -------------------------------------------------------
 
     def stats(self) -> Dict[str, float]:
@@ -844,6 +955,7 @@ class EpisodicServeEngine:
             overwrites=l1.overwrites,
             spills=self.store.spills,
             rehydrates=self.store.rehydrates,
+            rescan_hits=self.store.rescan_hits,
             quarantined=self.store.quarantined,
             spill_errors=self.store.spill_errors,
             rejections=self.rejections,

@@ -147,6 +147,30 @@ def dequantize_params(sw: ServingWeights) -> PyTree:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def place_serving_weights(sw: ServingWeights, mesh, layout) -> ServingWeights:
+    """Place serving weights in a named layout on a (sub)mesh.
+
+    The weights become stationary on ``mesh``'s device group: in a
+    multi-replica deployment each replica calls this with its OWN disjoint
+    group mesh (``repro.launch.mesh.make_replica_mesh``), so weights never
+    move across replica groups — the per-step wire is whatever the layout
+    pays WITHIN the group (zero for ``replicated``, partial-sum
+    activations for ``weight_stationary``).  ``mesh=None`` or
+    ``layout in (None, 'none')`` is the identity (single-device
+    placement); ``'auto'`` must be resolved to a concrete name by
+    ``repro.roofline.analysis.choose_serving_layout`` before this point —
+    placement applies a layout, it does not score one."""
+    if mesh is None or layout in (None, "none"):
+        return sw
+    if layout == "auto":
+        raise ValueError(
+            "resolve serve_layout='auto' with "
+            "repro.roofline.analysis.choose_serving_layout before placing "
+            "the serving weights")
+    from repro.roofline.analysis import serving_shardings
+    return jax.device_put(sw, serving_shardings(sw, mesh, layout))
+
+
 def param_bytes(sw: ServingWeights) -> Dict[str, int]:
     """Measured resident parameter bytes (host-side accounting over the
     ACTUAL stored arrays — not a model).  Returns totals plus the frozen

@@ -1,0 +1,293 @@
+"""Multi-replica episodic serving: replicated backbones, a uid-sharded
+task population, and a replica-aware router.
+
+The paper's test-time story is that meta-learners amortize adaptation into
+a cheap forward pass — so at "millions of users" the scaling axis is the
+*task population*, not the model.  One :class:`EpisodicServeEngine` is
+bounded by its slot count and its device group; this module scales past it
+by replication, porting the serving-group discipline of
+``scaling_transformer_inference_efficiency`` (Pope et al. — the
+latency-oriented 2D-partitioning repo in ``/root/related``) to episodic
+serving:
+
+* **Weights are stationary within a replica group, never moved across
+  groups.**  Each replica owns a full copy of the serving weights
+  (``ServingWeights``: the frozen slice optionally blockwise-int8, the
+  ``serve_layout`` placement applied PER GROUP on the replica's own
+  disjoint mesh from :func:`repro.launch.mesh.make_replica_mesh`).  Any
+  collective the predict step emits is intra-group by construction — the
+  compiled program only knows the group's devices — so per-step wire
+  bytes scale with the replica's device count, not the full mesh's.
+* **The task population is partitioned by uid hash.**
+  ``stable_uid_hash(uid) % replicas`` (process-stable crc32, never
+  Python's salted ``hash``) routes every request; repeat visitors land on
+  the replica already holding their adapted state (L1 or warm tier), so
+  replication multiplies the servable working set instead of diluting the
+  caches.  Each replica keeps its OWN L1 ``TaskStateCache``; the warm
+  tier is one shared directory partitioned into uid-hash subdirs
+  (``WarmTaskStore(shards=...)``) — replicas spill and rehydrate without
+  contending, and because the subdir is a pure function of the uid (and a
+  FIXED shard count, independent of the replica count), any replica can
+  find any uid's spilled state: the failover and resize paths.
+* **Per-step round-robin dispatch.**  ``step()`` steps every live replica
+  once, rotating which goes first, so one replica's slow adapt wave never
+  systematically delays the others' admission — the single-process stand-
+  in for replicas stepping concurrently on their own hosts.
+* **Admission rebalances only at the queue.**  ``submit`` delegates to
+  the routed replica's bounded queue: an overload rejection carries a
+  ``retry_after_us`` computed from THAT replica's adapt-cost EWMA (a hot
+  replica quotes honest, longer retry hints than an idle one), never a
+  global average.
+* **Replica failover** (fault site ``replica.dead``): a replica group
+  injected (or detected) dead is quarantined — the router drains its
+  unfinished requests and re-routes them to the surviving replicas by
+  deterministic linear probing of the same hash, so post-failover routing
+  is as stable as the original.  A re-routed uid whose state had spilled
+  rehydrates BIT-exactly on the survivor (shared warm root + rescan-on-
+  miss); one whose state lived only in the dead replica's L1 re-adapts
+  cold if its support set rode along, else fails terminally (counted,
+  never a crash).  ``stats()['replica_failovers']`` counts quarantine
+  events.
+
+``stats()`` aggregates the per-replica counters and merges the RAW
+latency observations before taking percentiles — exact nearest-rank
+p50/p99 over the whole deployment, not an average of per-replica
+percentiles — with the full per-replica breakdown under ``per_replica``.
+
+    meshes = make_replica_mesh(replicas=2, devices_per_replica=2)
+    router = ReplicatedServeEngine(learner, params, replicas=2,
+                                   meshes=meshes, warm_dir="/tmp/warm",
+                                   serve_quant="int8",
+                                   serve_layout="weight_stationary",
+                                   n_slots=4, support_buckets=(64,))
+    router.run_to_completion(requests)
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.faults.plan import REPLICA_DEAD
+from repro.serve.episodic import (EpisodicRequest, EpisodicServeEngine,
+                                  _pctl, stable_uid_hash)
+
+# Fixed default warm-shard count: a pure function of the uid partitions
+# the directory, so it must NOT follow the replica count — resizing the
+# deployment re-routes uids but every spilled npz stays exactly where any
+# replica's store will look for it.  8 is divisible by the 1/2/4-replica
+# configurations this container can emulate; when the replica count
+# divides it, each replica touches a disjoint set of subdirs.
+DEFAULT_WARM_SHARDS = 8
+
+
+def uid_replica(uid: int, replicas: int) -> int:
+    """The uid's home replica: ``stable_uid_hash(uid) % replicas``.  Pure
+    and process-stable — the routing contract repeat visitors rely on."""
+    return stable_uid_hash(uid) % replicas
+
+
+def _reset_for_reroute(req: EpisodicRequest) -> None:
+    """Scrub a request drained from a dead replica back to submittable
+    state.  Produced logits died with the replica (host-side partials are
+    discarded rather than risking a seam); ``t_enqueue`` is KEPT so the
+    merged latency percentiles honestly include the failover detour."""
+    req.logits = []
+    req.served = 0
+    req.cache_hit = None
+    req.done = False
+    req.t_admit = None
+    req.t_adapt = None
+    req.t_first_logit = None
+    req.t_done = None
+
+
+class ReplicatedServeEngine:
+    """Replica-aware router over N :class:`EpisodicServeEngine` replicas.
+
+    Construction kwargs split three ways: ``replicas``/``meshes``/
+    ``warm_dir``/``warm_shards``/``fault_plan``/``clock`` are router-
+    level; everything else (``n_slots``, ``support_buckets``,
+    ``serve_quant``, ``serve_layout``, ``cache_capacity``, ...) is passed
+    to every replica engine verbatim, so the int8 x layout composition of
+    the single-engine path applies per replica unchanged.  ``meshes``
+    (from :func:`repro.launch.mesh.make_replica_mesh`) pins replica r's
+    weights to its own disjoint device group; ``meshes=None`` runs all
+    replicas on default placement (the single-device test/demo mode —
+    routing, failover, and store semantics are identical).
+
+    All replicas share ``seed`` (default 0, via engine kwargs): an adapted
+    state is a pure function of (params, support, uid, seed), so which
+    replica adapts a task can never change its logits — the bit-exactness
+    contract the acceptance tests pin down.
+    """
+
+    def __init__(self, learner, params, *, replicas: int = 2,
+                 meshes: Optional[Sequence] = None,
+                 warm_dir=None, warm_shards: Optional[int] = None,
+                 fault_plan=None, clock=None, **engine_kw):
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
+        if meshes is not None and len(meshes) != replicas:
+            raise ValueError(f"got {len(meshes)} meshes for {replicas} "
+                             f"replicas; build them with "
+                             f"make_replica_mesh(replicas, "
+                             f"devices_per_replica)")
+        if warm_shards is None:
+            warm_shards = DEFAULT_WARM_SHARDS
+        self.n_replicas = replicas
+        self.fault_plan = fault_plan
+        self.replicas: List[EpisodicServeEngine] = [
+            EpisodicServeEngine(
+                learner, params,
+                mesh=meshes[r] if meshes is not None else None,
+                warm_dir=warm_dir, warm_shards=warm_shards,
+                fault_plan=fault_plan, clock=clock, **engine_kw)
+            for r in range(replicas)]
+        self._dead: set[int] = set()
+        self._rr = 0                      # round-robin rotation offset
+        self.steps = 0
+        self.replica_failovers = 0
+        self.rerouted_requests = 0
+        self.failover_failed = 0
+
+    # -- routing -------------------------------------------------------------
+
+    def route(self, uid: int) -> int:
+        """The live replica serving ``uid``: its hash home, or — when that
+        group is quarantined — the first live replica by deterministic
+        linear probing from it.  Stable across router restarts (pure
+        hash) and across the failover (same probe order for everyone)."""
+        for k in range(self.n_replicas):
+            cand = (uid_replica(uid, self.n_replicas) + k) % self.n_replicas
+            if cand not in self._dead:
+                return cand
+        raise RuntimeError("all replica groups are dead")
+
+    @property
+    def live_replicas(self) -> List[int]:
+        return [r for r in range(self.n_replicas) if r not in self._dead]
+
+    def submit(self, req: EpisodicRequest) -> bool:
+        """Route ``req`` by uid and enqueue it on its replica.  Overload
+        rejection (``max_queue``) happens at the ROUTED replica's queue
+        with that replica's own adapt-cost EWMA pricing the
+        ``retry_after_us`` — admission rebalances only at the queue."""
+        return self.replicas[self.route(req.uid)].submit(req)
+
+    # -- failover ------------------------------------------------------------
+
+    def _check_faults(self) -> None:
+        if self.fault_plan is None:
+            return
+        for r in list(self.live_replicas):
+            if self.fault_plan.fire(REPLICA_DEAD, r) is not None:
+                self.quarantine_replica(r)
+
+    def quarantine_replica(self, r: int) -> None:
+        """Take replica ``r`` out of rotation and re-route its unfinished
+        requests to the survivors.  Spilled state rehydrates on the new
+        replica (shared warm root, rescan-on-miss); L1-only state is lost
+        with the replica — a drained request with support re-adapts cold,
+        a support-less one whose uid the survivor cannot find anywhere
+        fails terminally (``failover_failed``; the request is marked, the
+        router keeps serving)."""
+        if r in self._dead:
+            return
+        if len(self.live_replicas) == 1:
+            raise RuntimeError(
+                f"cannot quarantine replica {r}: it is the last live "
+                f"replica group")
+        self._dead.add(r)
+        self.replica_failovers += 1
+        orphans = self.replicas[r].drain_unfinished()
+        for req in orphans:
+            _reset_for_reroute(req)
+            target = self.replicas[self.route(req.uid)]
+            if req.support_x is None and req.uid not in target.store:
+                # nothing anywhere can rebuild this task's state: its L1
+                # copy died with the replica and it never spilled
+                req.failed = True
+                req.done = True
+                req.t_done = target.clock()
+                self.failover_failed += 1
+                continue
+            self.rerouted_requests += 1
+            target.submit(req)
+        print(f"replica router: quarantined replica {r}, re-routed "
+              f"{self.rerouted_requests} request(s) to survivors "
+              f"{self.live_replicas}", flush=True)
+
+    # -- stepping ------------------------------------------------------------
+
+    def step(self) -> int:
+        """One router step: fire any pending ``replica.dead`` faults, then
+        step every live replica once in round-robin rotated order (the
+        replica that went first last step goes last this step).  Returns
+        total queries served across replicas."""
+        self._check_faults()
+        live = self.live_replicas
+        if not live:
+            raise RuntimeError("all replica groups are dead")
+        k = self._rr % len(live)
+        self._rr += 1
+        served = 0
+        for r in live[k:] + live[:k]:
+            served += self.replicas[r].step()
+        self.steps += 1
+        return served
+
+    @property
+    def busy(self) -> bool:
+        return any(self.replicas[r].busy for r in self.live_replicas)
+
+    def run_to_completion(self, requests: List[EpisodicRequest],
+                          max_steps: int = 100000) -> List[EpisodicRequest]:
+        for req in requests:
+            self.submit(req)
+        steps = 0
+        while self.busy and steps < max_steps:
+            self.step()
+            steps += 1
+        return requests
+
+    # -- observability -------------------------------------------------------
+
+    def stats(self) -> Dict[str, object]:
+        """Aggregated counters + EXACT merged latency percentiles.
+
+        Counters (``tasks_adapted``, ``queries_served``, cache/store/
+        degradation counters, compile counters, resident param bytes) are
+        summed across replicas — ``param_bytes_resident`` therefore counts
+        the replication cost honestly (R full copies).  ``adapt/query
+        p50/p99`` are nearest-rank percentiles over the POOLED raw
+        observations of every replica (merging percentiles would be
+        wrong).  Router-level: ``replica_failovers`` (quarantine events),
+        ``rerouted_requests``, ``failover_failed``, ``live_replicas``,
+        ``steps`` (router steps; each steps every live replica once).
+        ``per_replica`` carries each replica's full ``stats()`` dict."""
+        per = [eng.stats() for eng in self.replicas]
+        summed = (
+            "tasks_adapted", "queries_served", "queue_depth", "cache_hits",
+            "cache_misses", "evictions", "overwrites", "spills",
+            "rehydrates", "rescan_hits", "quarantined", "spill_errors",
+            "rejections", "deadline_abandoned", "failed_requests",
+            "slo_preemptions", "adapt_compiles", "predict_compiles",
+            "param_bytes_resident", "param_bytes_fp32",
+            "frozen_param_bytes_resident", "frozen_param_bytes_fp32")
+        out: Dict[str, object] = {k: sum(p[k] for p in per) for k in summed}
+        lookups = out["cache_hits"] + out["cache_misses"]
+        out["hit_rate"] = out["cache_hits"] / lookups if lookups else 0.0
+        adapt_lat = [x for eng in self.replicas for x in eng._adapt_lat_us]
+        query_lat = [x for eng in self.replicas for x in eng._query_lat_us]
+        out["adapt_p50_us"] = _pctl(adapt_lat, 50)
+        out["adapt_p99_us"] = _pctl(adapt_lat, 99)
+        out["query_p50_us"] = _pctl(query_lat, 50)
+        out["query_p99_us"] = _pctl(query_lat, 99)
+        out["failed_requests"] += self.failover_failed
+        out["steps"] = self.steps
+        out["n_replicas"] = self.n_replicas
+        out["live_replicas"] = len(self.live_replicas)
+        out["replica_failovers"] = self.replica_failovers
+        out["rerouted_requests"] = self.rerouted_requests
+        out["failover_failed"] = self.failover_failed
+        out["per_replica"] = per
+        return out

@@ -29,6 +29,28 @@ Two-level DP mesh contract (the task-batched meta-training engine,
   tests/test_multihost.py).  Per-step collective wire bytes are
   accounted by ``repro.roofline.hlo.collectives_report`` and tracked in
   ``benchmarks/dp_scaling.py``.
+
+Replica-serving mesh contract (the multi-replica episodic engine,
+``repro.serve.replica.ReplicatedServeEngine``):
+
+* ``repro.launch.mesh.make_replica_mesh(replicas, devices_per_replica)``
+  builds ``replicas`` DISJOINT 1-D ``('serve',)`` meshes over contiguous
+  device groups (process-major, so groups align with hosts).  Each
+  replica engine compiles and places its serving weights on its OWN group
+  mesh — the compiled program cannot name a device outside the group, so
+  every predict-step collective is intra-group by construction and
+  per-step wire bytes scale with ``devices_per_replica``, never with the
+  deployment size (asserted via ``collectives_report`` in
+  tests/test_replica.py).
+* Work is partitioned ACROSS groups by data, not by tensor: requests
+  route by stable uid hash (``repro.serve.episodic.stable_uid_hash``), so
+  the task population — the paper's scaling axis at serving time — splits
+  across replicas while weights are simply replicated per group (the
+  serving-group discipline of scaling_transformer_inference_efficiency).
+* The shared warm tier partitions by the SAME hash into a fixed number of
+  shard subdirs independent of the replica count: any replica can locate
+  any uid's spilled state (failover rehydration), and resizing the
+  deployment re-routes uids without moving their files.
 """
 
 try:

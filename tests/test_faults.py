@@ -35,13 +35,15 @@ from repro.core.set_encoder import SetEncoderConfig
 from repro.data.episodic import (EpisodicImageConfig, sample_image_task,
                                  task_batch_at)
 from repro.faults import (CKPT_PRE_COMMIT, CKPT_PRE_REPLACE, DATA_NAN,
-                          DATA_TRANSIENT, TRAIN_PREEMPT, TRAIN_STRAGGLER,
-                          WARM_CORRUPT, WARM_VANISH, FaultPlan, FaultSpec,
-                          InjectedKill, PreemptionSignal, TransientDataError)
+                          DATA_TRANSIENT, REPLICA_DEAD, TRAIN_PREEMPT,
+                          TRAIN_STRAGGLER, WARM_CORRUPT, WARM_VANISH,
+                          FaultPlan, FaultSpec, InjectedKill,
+                          PreemptionSignal, TransientDataError)
 from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
 from repro.optim import AdamWConfig, adamw_init
 from repro.serve.episodic import (EpisodicRequest, EpisodicServeEngine,
                                   TwoTierTaskStore, WarmTaskStore)
+from repro.serve.replica import ReplicatedServeEngine, uid_replica
 from repro.train.checkpoint import (CheckpointManager, ChecksumError,
                                     load_array_tree, save_array_tree)
 from repro.train.loop import DivergenceError, PreemptedError, train
@@ -526,6 +528,100 @@ def test_stats_exposes_degradation_counters_zero_on_clean_run():
     for k in ("quarantined", "spill_errors", "rejections",
               "deadline_abandoned", "failed_requests"):
         assert s[k] == 0, k
+
+
+# ---------------------------------------------------------------------------
+# replica.dead — replica failover in the multi-replica router
+# ---------------------------------------------------------------------------
+
+
+def _router(tmp_path=None, **kw):
+    lr = make_learner(MetaLearnerConfig(kind="protonets", way=3), BB, SET_CFG)
+    params = lr.init(jax.random.key(0))
+    kw.setdefault("lite", SERVE_LITE)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("query_chunk", 4)
+    kw.setdefault("support_buckets", (8,))
+    kw.setdefault("replicas", 2)
+    if tmp_path is not None:
+        kw.setdefault("warm_dir", tmp_path / "warm")
+    return ReplicatedServeEngine(lr, params, **kw)
+
+
+def _uids_homed(replica, replicas, n, start=0):
+    out, u = [], start
+    while len(out) < n:
+        if uid_replica(u, replicas) == replica:
+            out.append(u)
+        u += 1
+    return out
+
+
+def test_replica_dead_reroutes_and_rehydrates_bit_exact(tmp_path):
+    """A replica injected dead mid-run is quarantined: its queued work is
+    re-routed to the survivor by the same hash (linear probe), and uids
+    whose state had SPILLED to the shared warm tier rehydrate bit-exactly
+    there — replica 0's store never saw them spill (they landed after its
+    startup scan), so this exercises rescan-on-miss end to end."""
+    router = _router(tmp_path, cache_capacity=1)    # tiny L1: force spills
+    u1 = _uids_homed(1, 2, 3)
+    first = [_request(u) for u in u1]
+    router.run_to_completion(first)
+    # evict replica 1's resident state too, so every u1 state is on disk
+    router.run_to_completion([_request(u) for u in _uids_homed(1, 2, 1, 100)])
+    assert router.stats()["spills"] >= len(u1)
+
+    router.fault_plan = FaultPlan.single(REPLICA_DEAD, at=1)
+    repeats = [_request(u, with_support=False) for u in u1]
+    router.run_to_completion(repeats)
+
+    s = router.stats()
+    assert s["replica_failovers"] == 1 and s["live_replicas"] == 1
+    assert s["rerouted_requests"] == len(u1)
+    assert router.fault_plan.fired == [(REPLICA_DEAD, 1, "error")]
+    assert all(router.route(u) == 0 for u in u1)    # deterministic reroute
+    for a, b in zip(first, repeats):
+        assert b.done and not b.failed
+        assert _bit_equal(a.all_logits(), b.all_logits())
+    assert s["tasks_adapted"] == len(u1) + 1        # nothing re-adapted
+    assert s["per_replica"][0]["rescan_hits"] >= len(u1)
+    assert s["per_replica"][0]["rehydrates"] >= len(u1)
+
+
+def test_replica_dead_supportless_unspilled_fails_terminal():
+    """Without a warm tier, a dead replica's L1 dies with it: a drained
+    support-less request whose uid the survivor cannot find anywhere
+    fails terminally (counted, never a crash), while drained requests
+    WITH support re-adapt cold on the survivor."""
+    router = _router(None)                          # no warm tier
+    (u,) = _uids_homed(1, 2, 1)
+    router.run_to_completion([_request(u)])         # state in replica 1's L1
+
+    router.fault_plan = FaultPlan.single(REPLICA_DEAD, at=1)
+    orphan = _request(u, with_support=False)
+    healthy = _request(_uids_homed(1, 2, 2)[1])     # support attached
+    router.submit(orphan)
+    router.submit(healthy)
+    router.run_to_completion([])
+
+    assert orphan.failed and orphan.done and not orphan.logits
+    assert healthy.done and not healthy.failed      # re-adapted on 0
+    s = router.stats()
+    assert s["replica_failovers"] == 1
+    assert s["failover_failed"] == 1
+    assert s["failed_requests"] >= 1
+    assert s["per_replica"][0]["queries_served"] > 0
+
+
+def test_last_replica_cannot_be_quarantined():
+    """Failover needs a survivor: quarantining the last live replica
+    raises instead of silently dropping the deployment."""
+    router = _router(None)
+    router.quarantine_replica(0)
+    with pytest.raises(RuntimeError, match="last live"):
+        router.quarantine_replica(1)
+    # routing still works through the survivor
+    assert all(router.route(u) == 1 for u in range(8))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,456 @@
+"""Multi-replica episodic serving (PR9): uid-hash routing over N engine
+replicas, a shared uid-sharded warm tier, and per-group device isolation.
+
+Contracts under test (ISSUE-9 acceptance):
+
+* routing is a pure function of (uid, replicas): deterministic across
+  router restarts, and changing the replica count re-routes uids but
+  NEVER loses warm state (fixed shard-subdir layout);
+* a mixed-uid workload through the router is BIT-exact with one solo
+  engine serving the same requests — which replica adapts a task can
+  never change its logits;
+* per-replica compile counters stay flat across a ragged mixed-replica
+  workload and equal the single-replica count (replication multiplies
+  capacity, not compilation);
+* overload rejection prices ``retry_after_us`` from the ROUTED replica's
+  own adapt-cost EWMA, not a global average;
+* int8 x layout composition applies per replica (resident bytes count
+  R full copies honestly);
+* tier-1 perf smoke: 2 replicas admit >= 1.5x requests per engine step
+  vs 1 replica under a FakeClock — zero real sleeps;
+* [subprocess, 4 emulated devices] with 2 replicas x 2 devices from
+  ``make_replica_mesh``: logits bit-exact vs solo, compile counters flat
+  per replica, and ``collectives_report`` proves ZERO inter-group wire —
+  per-replica wire bytes equal a solo 2-device engine's (scale with the
+  group, not the deployment) and every collective's group fits in the
+  replica's devices.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import FakeClock
+from repro.core.lite import LiteSpec
+from repro.core.meta_learners import MetaLearnerConfig, make_learner
+from repro.core.set_encoder import SetEncoderConfig
+from repro.data.episodic import EpisodicImageConfig, sample_image_task
+from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
+from repro.serve.episodic import (EpisodicRequest, EpisodicServeEngine,
+                                  stable_uid_hash)
+from repro.serve.replica import (DEFAULT_WARM_SHARDS, ReplicatedServeEngine,
+                                 uid_replica)
+
+pytestmark = pytest.mark.replica
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+BB = make_conv_backbone(ConvBackboneConfig(widths=(4,), feature_dim=8))
+SET_CFG = SetEncoderConfig(kind="conv", conv_blocks=1, conv_width=4,
+                           task_dim=8)
+TCFG = EpisodicImageConfig(way=3, shot=2, query_per_class=2, image_size=8)
+SERVE_LITE = LiteSpec(exact=True, chunk_size=8)
+
+
+def _learner():
+    return make_learner(MetaLearnerConfig(kind="protonets", way=3), BB,
+                        SET_CFG)
+
+
+def _router(learner, params, **kw):
+    kw.setdefault("lite", SERVE_LITE)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("query_chunk", 4)
+    kw.setdefault("support_buckets", (8,))
+    return ReplicatedServeEngine(learner, params, **kw)
+
+
+def _solo(learner, params, **kw):
+    kw.setdefault("lite", SERVE_LITE)
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("query_chunk", 4)
+    kw.setdefault("support_buckets", (8,))
+    return EpisodicServeEngine(learner, params, **kw)
+
+
+def _request(uid, with_support=True, seed=300):
+    t = sample_image_task(jax.random.key(seed + uid), TCFG)
+    return EpisodicRequest(
+        uid=uid,
+        support_x=np.asarray(t.support_x) if with_support else None,
+        support_y=np.asarray(t.support_y) if with_support else None,
+        query_x=np.asarray(t.query_x), way=3)
+
+
+def _uids_for(replica, replicas, n, start=0):
+    """First ``n`` uids >= start whose hash home is ``replica``."""
+    out = []
+    u = start
+    while len(out) < n:
+        if uid_replica(u, replicas) == replica:
+            out.append(u)
+        u += 1
+    return out
+
+
+# -- routing determinism ------------------------------------------------------
+
+
+def test_uid_routing_pure_and_restart_stable():
+    """Routing is a pure function of (uid, replicas): no process salt
+    (crc32, not builtin hash), identical across two independent routers
+    over the same config, and ``route`` == ``uid_replica`` while every
+    replica is live."""
+    import zlib
+    for uid in (0, 1, 7, 123456, 2**40 + 17, -3):
+        assert stable_uid_hash(uid) == zlib.crc32(
+            int(uid).to_bytes(8, "little", signed=True))
+    learner = _learner()
+    params = learner.init(jax.random.key(0))
+    a = _router(learner, params, replicas=3)
+    b = _router(learner, params, replicas=3)
+    for uid in range(50):
+        assert a.route(uid) == b.route(uid) == uid_replica(uid, 3)
+
+
+def test_mixed_uid_workload_bit_exact_vs_solo():
+    """A mixed-uid workload (cold wave + support-less repeats) through 2
+    replicas produces BIT-identical logits to one solo engine: adapted
+    state is a pure function of (params, support, uid, seed), so the
+    partition can never change results."""
+    learner = _learner()
+    params = learner.init(jax.random.key(0))
+    router = _router(learner, params, replicas=2)
+    solo = _solo(learner, params)
+
+    uids = list(range(6))
+    assert len({uid_replica(u, 2) for u in uids}) == 2  # genuinely mixed
+    r_reqs = [_request(u) for u in uids] + \
+        [_request(u, with_support=False) for u in uids[:3]]
+    s_reqs = [_request(u) for u in uids] + \
+        [_request(u, with_support=False) for u in uids[:3]]
+    router.run_to_completion(r_reqs)
+    solo.run_to_completion(s_reqs)
+    for a, b in zip(r_reqs, s_reqs):
+        assert a.done and b.done and not a.failed
+        np.testing.assert_array_equal(a.all_logits(), b.all_logits())
+    # repeats hit the replica that adapted them — no re-adaptation
+    assert router.stats()["tasks_adapted"] == len(uids)
+
+
+def test_compile_counters_flat_and_equal_single_replica():
+    """Ragged mixed-replica workload (two support buckets, uneven uid
+    split): each replica compiles each bucket's adapt dispatch ONCE and
+    the predict dispatch ONCE — exactly the solo engine's counters.
+    Replication multiplies serving capacity, never compilation."""
+    learner = _learner()
+    params = learner.init(jax.random.key(0))
+    kw = dict(support_buckets=(4, 8))
+    router = _router(learner, params, replicas=2, **kw)
+    solo = _solo(learner, params, **kw)
+
+    rng = np.random.default_rng(0)
+
+    def ragged(uid, n_support):
+        reps = n_support // 3
+        return EpisodicRequest(
+            uid=uid,
+            support_x=rng.normal(size=(3 * reps, 8, 8, 3)).astype(np.float32),
+            support_y=np.tile(np.arange(3, dtype=np.int32), reps),
+            query_x=rng.normal(size=(4, 8, 8, 3)).astype(np.float32), way=3)
+
+    # both replicas see both buckets; the split is ragged (3 vs 5 uids)
+    sizes = {u: (3 if i % 2 else 6)
+             for i, u in enumerate(_uids_for(0, 2, 3) + _uids_for(1, 2, 5))}
+    reqs = [ragged(u, n) for u, n in sizes.items()]
+    router.run_to_completion(reqs)
+    solo.run_to_completion([ragged(u, n) for u, n in sizes.items()])
+    ss = solo.stats()
+    assert ss["adapt_compiles"] == 2 and ss["predict_compiles"] == 1
+    for p in router.stats()["per_replica"]:
+        assert p["adapt_compiles"] == ss["adapt_compiles"]
+        assert p["predict_compiles"] == ss["predict_compiles"]
+
+
+# -- warm tier across resizes -------------------------------------------------
+
+
+def test_resizing_replicas_never_loses_warm_state(tmp_path):
+    """The warm shard subdir is a pure function of (uid, shard count) with
+    the shard count FIXED (DEFAULT_WARM_SHARDS, independent of replicas):
+    a deployment resized 2 -> 4 replicas over the same warm root re-routes
+    uids but finds every spilled state where it was left — support-less
+    repeats rehydrate bit-exactly instead of failing or re-adapting."""
+    assert DEFAULT_WARM_SHARDS % 2 == 0 and DEFAULT_WARM_SHARDS % 4 == 0
+    learner = _learner()
+    params = learner.init(jax.random.key(0))
+    warm = tmp_path / "warm"
+    uids = list(range(8))
+
+    first = [_request(u) for u in uids]
+    r2 = _router(learner, params, replicas=2, warm_dir=warm,
+                 cache_capacity=1)                  # tiny L1: force spills
+    r2.run_to_completion(first)
+    # evict each replica's last resident state too (capacity-1 L1 keeps
+    # the most recent uid; adapting one more per replica spills it)
+    r2.run_to_completion([_request(u)
+                          for u in _uids_for(0, 2, 1, start=100)
+                          + _uids_for(1, 2, 1, start=100)])
+    assert r2.stats()["spills"] >= len(uids)
+    # the shared root grew uid-hash shard subdirs, no files at the root
+    assert sorted(p.name for p in warm.glob("uid_*")) == []
+    assert any(warm.glob("shard_*/uid_*.npz"))
+
+    # resized deployment: new router, MORE replicas, same warm root.
+    # Support-less repeats must all be served (nothing lost), and uids
+    # that changed home rehydrate from the shared warm tier.
+    r4 = _router(learner, params, replicas=4, warm_dir=warm,
+                 cache_capacity=1)
+    moved = [u for u in uids if uid_replica(u, 4) != uid_replica(u, 2)]
+    assert moved, "seed produced no re-routed uids; widen the uid range"
+    repeats = [_request(u, with_support=False) for u in uids]
+    r4.run_to_completion(repeats)
+    s4 = r4.stats()
+    assert all(r.done and not r.failed for r in repeats)
+    assert s4["tasks_adapted"] == 0                  # nothing re-adapted
+    assert s4["rehydrates"] == len(uids)             # all from the warm tier
+    for a, b in zip(first, repeats):
+        np.testing.assert_array_equal(a.all_logits(), b.all_logits())
+
+
+# -- admission ---------------------------------------------------------------
+
+
+def test_rejection_priced_by_routed_replica_ewma():
+    """Bounded-queue rejection quotes ``retry_after_us`` from the ROUTED
+    replica's own adapt-cost EWMA: a hot replica's hint, not a deployment
+    average — and a uid routed to the idle replica still admits."""
+    learner = _learner()
+    params = learner.init(jax.random.key(0))
+    router = _router(learner, params, replicas=2, max_queue=1, n_slots=2)
+    router.replicas[0]._adapt_cost_est_us = 5000.0   # hot replica
+    router.replicas[1]._adapt_cost_est_us = 100.0    # idle replica
+
+    u0a, u0b = _uids_for(0, 2, 2)
+    (u1,) = _uids_for(1, 2, 1)
+    assert router.submit(_request(u0a))              # fills replica 0's queue
+    rej = _request(u0b)
+    assert not router.submit(rej)                    # over replica 0's bound
+    assert rej.rejected and rej.retry_after_us == 5000.0
+    ok = _request(u1)
+    assert router.submit(ok)                         # replica 1 is idle
+    assert not ok.rejected
+    assert router.stats()["rejections"] == 1
+
+
+def test_throughput_smoke_two_replicas_admit_faster():
+    """Tier-1 perf smoke (FakeClock, zero real sleeps): the same 8-request
+    workload completes in >= 1.5x fewer router steps on 2 replicas than on
+    1 — each router step steps every live replica once, so admitted
+    requests per engine step scale with the replica count."""
+    learner = _learner()
+    params = learner.init(jax.random.key(0))
+    # 4 uids homed on each replica: the split is exactly even
+    uids = _uids_for(0, 2, 4) + _uids_for(1, 2, 4)
+
+    def run(replicas):
+        clk = FakeClock()
+        eng = _router(learner, params, replicas=replicas, n_slots=1,
+                      clock=clk)
+        for u in uids:
+            eng.submit(_request(u))
+        steps = 0
+        while eng.busy:
+            eng.step()
+            clk.advance(0.001)
+            steps += 1
+            assert steps < 100
+        assert eng.stats()["tasks_adapted"] == len(uids)
+        return steps
+
+    steps_1, steps_2 = run(1), run(2)
+    assert steps_1 / steps_2 >= 1.5, (steps_1, steps_2)
+
+
+# -- quantized replicas -------------------------------------------------------
+
+
+@pytest.mark.quant
+def test_int8_composes_per_replica():
+    """serve_quant='int8' applies to EVERY replica's weight copy: summed
+    resident bytes are R x the solo int8 engine's (the replication cost,
+    counted honestly), the frozen slice shrinks below fp32 per copy (the
+    >=3x guard at realistic sizes lives in tests/test_quant_serving.py —
+    this backbone is too tiny for it), and logits agree with the solo
+    int8 engine bit-for-bit."""
+    learner = _learner()
+    params = learner.init(jax.random.key(0))
+    router = _router(learner, params, replicas=2, serve_quant="int8")
+    solo = _solo(learner, params, serve_quant="int8")
+    reqs = [_request(u) for u in range(4)]
+    router.run_to_completion(reqs)
+    solo_reqs = [_request(u) for u in range(4)]
+    solo.run_to_completion(solo_reqs)
+    for a, b in zip(reqs, solo_reqs):
+        np.testing.assert_array_equal(a.all_logits(), b.all_logits())
+    rs, ss = router.stats(), solo.stats()
+    assert rs["param_bytes_resident"] == 2 * ss["param_bytes_resident"]
+    assert rs["frozen_param_bytes_resident"] < rs["frozen_param_bytes_fp32"]
+
+
+# -- device-group isolation (subprocess, 4 emulated devices) ------------------
+
+_SETUP = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core.lite import LiteSpec
+    from repro.core.meta_learners import MetaLearnerConfig, make_learner
+    from repro.core.set_encoder import SetEncoderConfig
+    from repro.data.episodic import EpisodicImageConfig, sample_image_task
+    from repro.launch.mesh import make_replica_mesh
+    from repro.models.conv_backbone import (ConvBackboneConfig,
+                                            make_conv_backbone)
+    from repro.serve.episodic import EpisodicRequest, EpisodicServeEngine
+    from repro.serve.replica import ReplicatedServeEngine
+
+    bb = make_conv_backbone(ConvBackboneConfig(widths=(4,), feature_dim=8))
+    learner = make_learner(
+        MetaLearnerConfig(kind="protonets", way=3), bb,
+        SetEncoderConfig(kind="conv", conv_blocks=1, conv_width=4,
+                         task_dim=8))
+    params = learner.init(jax.random.key(0))
+    tcfg = EpisodicImageConfig(way=3, shot=2, query_per_class=2,
+                               image_size=8)
+    kw = dict(lite=LiteSpec(exact=True, chunk_size=8), n_slots=2,
+              query_chunk=4, support_buckets=(8,))
+
+    def request(uid):
+        t = sample_image_task(jax.random.key(300 + uid), tcfg)
+        return EpisodicRequest(uid=uid, support_x=np.asarray(t.support_x),
+                               support_y=np.asarray(t.support_y),
+                               query_x=np.asarray(t.query_x), way=3)
+""")
+
+
+@pytest.fixture
+def run_devices():
+    """Run ``_SETUP + code`` in a subprocess emulating N CPU devices
+    (XLA_FLAGS must be set before jax import — the fake devices must not
+    leak into this process; same pattern as tests/test_multihost.py)."""
+
+    def run(code: str, devices: int = 4, timeout: int = 540) -> str:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count"
+                            f"={devices}")
+        env["PYTHONPATH"] = SRC
+        out = subprocess.run(
+            [sys.executable, "-c", _SETUP + textwrap.dedent(code)],
+            capture_output=True, text=True, env=env, timeout=timeout)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return out.stdout
+
+    return run
+
+
+def test_replica_groups_bit_exact_and_counters_flat(run_devices):
+    """ISSUE-9 acceptance (i)+(ii) on 2 replicas x 2 devices: a mixed-uid
+    workload through device-group replicas is BIT-exact with a solo
+    no-mesh engine, and each replica's compile counters equal the solo
+    engine's."""
+    out = run_devices("""
+        assert len(jax.devices()) == 4
+        meshes = make_replica_mesh(2, 2)
+        assert not (set(meshes[0].devices.flat)
+                    & set(meshes[1].devices.flat))
+        router = ReplicatedServeEngine(learner, params, replicas=2,
+                                       meshes=meshes,
+                                       serve_layout="replicated", **kw)
+        solo = EpisodicServeEngine(learner, params, **kw)
+        reqs = [request(u) for u in range(6)]
+        solo_reqs = [request(u) for u in range(6)]
+        router.run_to_completion(reqs)
+        solo.run_to_completion(solo_reqs)
+        for a, b in zip(reqs, solo_reqs):
+            assert a.done and b.done
+            np.testing.assert_array_equal(a.all_logits(), b.all_logits())
+        ss = solo.stats()
+        for p in router.stats()["per_replica"]:
+            assert p["adapt_compiles"] == ss["adapt_compiles"]
+            assert p["predict_compiles"] == ss["predict_compiles"]
+        print("BITEXACT_OK")
+    """)
+    assert "BITEXACT_OK" in out
+
+
+def test_predict_wire_scales_with_group_not_deployment(run_devices):
+    """ISSUE-9 acceptance (iii): compile the predict step weight-stationary
+    on one 2-device replica group vs a solo 2-device mesh vs the full
+    4-device mesh.  Per-replica wire bytes == the solo 2-device engine's
+    (the group IS the collective domain), every collective's group fits in
+    the replica's 2 devices (zero inter-group communication is structural:
+    the program cannot name an outside device), and the 4-device wire is
+    strictly larger.  Under 'replicated' the step has no collectives at
+    all."""
+    out = run_devices("""
+        from jax.sharding import Mesh
+        from repro.core.episodic_train import task_key
+        from repro.data.episodic import collate_task_batch
+        from repro.roofline.analysis import score_serving_layout
+        from repro.serve.quant_params import dequantize_params, \\
+            quantize_frozen
+
+        sw = quantize_frozen(learner, params, "int8")
+        probe = [sample_image_task(jax.random.key(i), tcfg)
+                 for i in range(2)]
+        batch = collate_task_batch(probe, support_size=8,
+                                   query_size=probe[0].query_x.shape[0])
+        keys = jax.vmap(lambda i: task_key(jax.random.key(0), i))(
+            jnp.arange(2))
+        lite = kw["lite"]
+        states = learner.adapt_batch(dequantize_params(sw), batch, keys,
+                                     lite)
+        fn = lambda w, st, qx: learner.predict_batch(
+            dequantize_params(w), st, qx)
+        args = (states, batch.query_x)
+
+        group = make_replica_mesh(2, 2)[0]            # one replica's mesh
+        solo2 = Mesh(np.asarray(jax.devices()[:2]), ("serve",))
+        full4 = Mesh(np.asarray(jax.devices()), ("serve",))
+
+        ws_group = score_serving_layout(fn, sw, args, group,
+                                        "weight_stationary")
+        ws_solo2 = score_serving_layout(fn, sw, args, solo2,
+                                        "weight_stationary")
+        ws_full4 = score_serving_layout(fn, sw, args, full4,
+                                        "weight_stationary")
+        rep_group = score_serving_layout(fn, sw, args, group, "replicated")
+
+        assert ws_group["wire_bytes"] == ws_solo2["wire_bytes"], \\
+            (ws_group["wire_bytes"], ws_solo2["wire_bytes"])
+        assert ws_group["wire_bytes"] > 0
+        assert ws_full4["wire_bytes"] > ws_group["wire_bytes"]
+        assert rep_group["wire_bytes"] == 0
+        assert rep_group["collective_count"] == 0
+
+        # every collective's replica group fits inside the group's 2
+        # devices — zero inter-group communication, structurally
+        from repro.roofline.analysis import batch_shardings, \\
+            serving_shardings
+        from repro.roofline.hlo import collectives_report
+        in_sh = (serving_shardings(sw, group, "weight_stationary"),) + \\
+            tuple(batch_shardings(a, group, "weight_stationary")
+                  for a in args)
+        compiled = jax.jit(fn, in_shardings=in_sh).lower(
+            sw, *args).compile()
+        rep = collectives_report(compiled.as_text())
+        assert rep["count"] > 0
+        for kind, row in rep["per_kind"].items():
+            assert row["max_group"] <= 2, (kind, row)
+        print("WIRE", ws_group["wire_bytes"], ws_full4["wire_bytes"])
+        print("ISOLATION_OK")
+    """)
+    assert "ISOLATION_OK" in out

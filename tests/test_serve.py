@@ -567,7 +567,8 @@ def test_perf_smoke_batched_predict_beats_per_task_loop(key):
 # ---------------------------------------------------------------------------
 
 from conftest import FakeClock, scripted_stream  # noqa: E402
-from repro.serve.episodic import TwoTierTaskStore, WarmTaskStore  # noqa: E402
+from repro.serve.episodic import (TwoTierTaskStore, WarmTaskStore,  # noqa: E402
+                                  stable_uid_hash)
 
 
 @pytest.mark.serve
@@ -590,6 +591,61 @@ def test_task_state_cache_overwrite_and_eviction_stats():
     assert 2 not in c and 1 in c and 3 in c
     assert c.get(2) is None
     assert (c.hits, c.misses) == (1, 1)
+
+
+@pytest.mark.serve
+def test_warm_store_rescan_on_miss_cross_store(tmp_path):
+    """Cross-process safety (the multi-replica contract): a uid spilled by
+    store A AFTER store B's startup scan is still found by B — ``get``
+    rescans the uid's sidecar path before giving up instead of trusting
+    the construction-time index.  This is the post-failover rehydration
+    path; without it, replica B could only see spills that predate its
+    own start."""
+    state = {"w": np.arange(6, dtype=np.float32)}
+    b = WarmTaskStore(tmp_path, shards=4)           # scans an empty dir
+    a = WarmTaskStore(tmp_path, shards=4)
+    a.put(7, state)                                 # after b's scan
+    assert 7 in b                                   # rescan via __contains__
+    got = b.get(7)
+    assert got is not None
+    np.testing.assert_array_equal(got["w"], state["w"])
+    assert b.rescan_hits == 1
+    assert b.get(999) is None                       # a true miss stays a miss
+    # corruption found through B quarantines the entry AND its sidecar,
+    # so no store — current or future — can resurrect it
+    (a._path(7)).write_bytes(b"junk")
+    assert b.get(7) is None and b.quarantined == 1
+    b2 = WarmTaskStore(tmp_path, shards=4)
+    assert b2.get(7) is None and b2.quarantined == 0  # sidecar already gone
+
+
+@pytest.mark.serve
+def test_warm_store_sharded_layout_fixed_by_uid_hash(tmp_path):
+    """With ``shards=N`` every uid's files live in the pure-function
+    subdir ``shard_{stable_uid_hash(uid) % N}`` (no files at the root),
+    independent stores agree on the location, and entries written under a
+    DIFFERENT shard count remain loadable (the rescan walks every shard
+    subdir) and migrate to the canonical shard on the next put."""
+    state = {"w": np.ones((3,), np.float32)}
+    s = WarmTaskStore(tmp_path, shards=8)
+    for uid in range(12):
+        s.put(uid, state)
+    assert not list(tmp_path.glob("uid_*"))         # nothing at the root
+    for uid in range(12):
+        shard = tmp_path / f"shard_{stable_uid_hash(uid) % 8}"
+        assert (shard / f"uid_{uid}.npz").exists()
+        assert WarmTaskStore(tmp_path, shards=8).get(uid) is not None
+
+    # written under shards=1 (files at the root), read under shards=8
+    flat_dir = tmp_path / "flat"
+    WarmTaskStore(flat_dir, shards=1).put(3, state)
+    resharded = WarmTaskStore(flat_dir, shards=8)
+    assert resharded.get(3) is not None             # found despite new layout
+    resharded.put(3, state)                         # migrates to canonical
+    assert not (flat_dir / "uid_3.npz").exists()
+    canon = flat_dir / f"shard_{stable_uid_hash(3) % 8}"
+    assert (canon / "uid_3.npz").exists()
+    assert WarmTaskStore(flat_dir, shards=8).get(3) is not None
 
 
 @pytest.mark.serve
