@@ -13,6 +13,7 @@ from repro.core.meta_learners import MetaLearnerConfig, make_learner
 from repro.core.set_encoder import SetEncoderConfig
 from repro.data.episodic import EpisodicImageConfig, sample_image_task
 from repro.models.conv_backbone import ConvBackboneConfig, make_conv_backbone
+from repro.roofline.hlo import xla_cost_analysis
 
 LEARNERS = (
     ("protonets", "1F"),
@@ -38,9 +39,7 @@ def run() -> list:
 
         adapt = jax.jit(lambda p, sx, sy: lr.adapt(p, sx, sy))
         lowered = adapt.lower(params, task.support_x, task.support_y)
-        cost = lowered.compile().cost_analysis() or {}
-        if isinstance(cost, (list, tuple)):      # newer jax: list of dicts
-            cost = cost[0] if cost else {}
+        cost = xla_cost_analysis(lowered.compile())
         macs = float(cost.get("flops", 0.0)) / 2.0
         wall_us = time_call(adapt, params, task.support_x, task.support_y)
         rows.append(dict(model=kind, adapt_macs=f"{macs:.3e}",

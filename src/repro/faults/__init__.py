@@ -25,17 +25,18 @@ import signal as _signal
 from typing import Optional, Sequence
 
 from repro.faults.plan import (ALL_SITES, CKPT_PRE_COMMIT, CKPT_PRE_REPLACE,
-                               DATA_NAN, DATA_TRANSIENT, REPLICA_DEAD,
-                               TRAIN_PREEMPT, TRAIN_STRAGGLER, WARM_CORRUPT,
-                               WARM_VANISH, FaultPlan, FaultSpec,
-                               InjectedKill, TransientDataError,
+                               DATA_NAN, DATA_TRANSIENT, FAULT_SITES,
+                               REPLICA_DEAD, TRAIN_PREEMPT, TRAIN_STRAGGLER,
+                               WARM_CORRUPT, WARM_VANISH, FaultPlan,
+                               FaultSpec, InjectedKill, TransientDataError,
                                advance_clock)
 
 __all__ = [
     "ALL_SITES", "CKPT_PRE_COMMIT", "CKPT_PRE_REPLACE", "DATA_NAN",
-    "DATA_TRANSIENT", "REPLICA_DEAD", "TRAIN_PREEMPT", "TRAIN_STRAGGLER",
-    "WARM_CORRUPT", "WARM_VANISH", "FaultPlan", "FaultSpec", "InjectedKill",
-    "TransientDataError", "advance_clock", "PreemptionSignal",
+    "DATA_TRANSIENT", "FAULT_SITES", "REPLICA_DEAD", "TRAIN_PREEMPT",
+    "TRAIN_STRAGGLER", "WARM_CORRUPT", "WARM_VANISH", "FaultPlan",
+    "FaultSpec", "InjectedKill", "TransientDataError", "advance_clock",
+    "PreemptionSignal",
 ]
 
 

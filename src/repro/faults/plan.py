@@ -68,6 +68,13 @@ ALL_SITES = (DATA_NAN, DATA_TRANSIENT, TRAIN_PREEMPT, TRAIN_STRAGGLER,
              CKPT_PRE_COMMIT, CKPT_PRE_REPLACE, WARM_CORRUPT, WARM_VANISH,
              REPLICA_DEAD)
 
+# The site registry: every FaultSpec.site must be one of these (validated
+# at construction), and every injection point must name its site via the
+# constants above — the `fault-site-registry` lint rule rejects raw string
+# literals at fire()/FaultSpec call sites, so the registry and the wired
+# sites can never drift apart silently.
+FAULT_SITES = frozenset(ALL_SITES)
+
 
 class TransientDataError(RuntimeError):
     """A retryable data-source failure (the injected stand-in for a flaky
@@ -94,6 +101,12 @@ class FaultSpec:
     remaining: int = dataclasses.field(default=-1)
 
     def __post_init__(self):
+        if self.site not in FAULT_SITES:
+            raise ValueError(
+                f"unknown fault site {self.site!r}: every site must be "
+                f"declared in the repro/faults/plan.py registry "
+                f"(FAULT_SITES) and referenced via its constant — known "
+                f"sites: {sorted(FAULT_SITES)}")
         if self.remaining < 0:
             self.remaining = self.count
 
@@ -189,4 +202,7 @@ def advance_clock(clock: Callable[[], float], dt: float) -> None:
         clock.advance(dt)
     else:
         import time
+        # lint: allow(clock-discipline): the wall-clock half of the
+        # injectable-clock contract itself — launchers land here, tests
+        # always inject a FakeClock and never reach this branch
         time.sleep(dt)

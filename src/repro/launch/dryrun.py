@@ -19,7 +19,7 @@ import json
 import pathlib
 import time
 import traceback
-from typing import Dict
+from typing import Callable, Dict
 
 import jax
 import numpy as np
@@ -99,7 +99,11 @@ def apply_variant(cfg, variant: str):
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
-             variant: str = "optimized") -> Dict:
+             variant: str = "optimized",
+             clock: Callable[[], float] = time.monotonic) -> Dict:
+    """``clock`` is injectable (PR6/PR7 clock discipline): the default is
+    a monotonic wall clock for the launcher path; tests may pass a
+    FakeClock so the recorded lower/compile timings are deterministic."""
     cfg = apply_variant(get_config(arch), variant)
     shape = SHAPES_BY_NAME[shape_name]
     api = get_api(cfg)
@@ -130,7 +134,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     def tp_strip(specs):
         return rules.strip_axes(specs) if tp_off else specs
 
-    t0 = time.time()
+    t0 = clock()
     if shape.kind == "train":
         init = make_init_state(cfg, adamw_for(cfg))
         state_abs = jax.eval_shape(init, jax.random.key(0))
@@ -189,15 +193,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
             ).lower(params_abs, cache_abs, batch_abs["tokens"])
         state_bytes = (_analytic_state_bytes(params_abs, pspecs, mesh) +
                        _analytic_state_bytes(cache_abs, cspecs, mesh))
-    t_lower = time.time() - t0
+    t_lower = clock() - t0
 
-    t0 = time.time()
+    t0 = clock()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = clock() - t0
 
-    cost = compiled.cost_analysis() or {}
-    if isinstance(cost, (list, tuple)):      # newer jax: list of dicts
-        cost = cost[0] if cost else {}
+    cost = hlo_parse.xla_cost_analysis(compiled)
     analysis = hlo_parse.analyze(compiled.as_text())
     mem = _mem_analysis(compiled)
 

@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from typing import Callable
 
 import jax
 import numpy as np
@@ -54,7 +55,12 @@ from repro.models.registry import get_api
 from repro.serve.engine import Request, ServeEngine
 
 
-def run_episodic(args) -> None:
+def run_episodic(args, clock: Callable[[], float] = time.monotonic) -> None:
+    """``clock`` is injectable (the PR6/PR7 clock-discipline contract):
+    the launcher's wall-clock default is the reference monotonic clock;
+    tests can pass a FakeClock and the printed throughput numbers become
+    deterministic.  The engine itself receives its own injectable clock
+    via ``EpisodicServeEngine(clock=...)``."""
     from repro.core.lite import LiteSpec
     from repro.core.meta_learners import MetaLearnerConfig, make_learner
     from repro.core.set_encoder import SetEncoderConfig
@@ -161,10 +167,10 @@ def run_episodic(args) -> None:
     # cold wave first so every warm request finds its user's state cached
     # regardless of slot count — warm traffic measures the cache, not
     # admission-wave luck
-    t0 = time.time()
+    t0 = clock()
     engine.run_to_completion(cold)
     engine.run_to_completion(warm)
-    dt = time.time() - t0
+    dt = clock() - t0
     s = engine.stats()
     # every request reaches a terminal outcome: served, or a counted
     # degradation (backpressure rejection / deadline abandonment / failed)
@@ -212,7 +218,7 @@ def run_episodic(args) -> None:
               f"preds={r.predictions()[:8].tolist()}")
 
 
-def main() -> None:
+def main(clock: Callable[[], float] = time.monotonic) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="minitron-4b")
     ap.add_argument("--requests", type=int, default=8)
@@ -312,7 +318,7 @@ def main() -> None:
     args = ap.parse_args()
 
     if args.episodic:
-        run_episodic(args)
+        run_episodic(args, clock=clock)
         return
 
     cfg = get_smoke_config(args.arch)
@@ -328,9 +334,9 @@ def main() -> None:
                     max_new_tokens=args.max_new,
                     temperature=args.temperature)
             for i in range(args.requests)]
-    t0 = time.time()
+    t0 = clock()
     engine.run_to_completion(reqs)
-    dt = time.time() - t0
+    dt = clock() - t0
     n_tok = sum(len(r.out_tokens) for r in reqs)
     print(f"{cfg.name} ({cfg.family} cache): {len(reqs)} requests, "
           f"{n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s on "

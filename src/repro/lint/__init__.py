@@ -1,0 +1,76 @@
+"""repro.lint — the repo-native static-analysis pass.
+
+Two layers, one CLI::
+
+    PYTHONPATH=src python -m repro.lint                  # AST scan (src/ + tests/)
+    PYTHONPATH=src python -m repro.lint --json           # machine-readable findings
+    PYTHONPATH=src python -m repro.lint path/to/file.py  # scoped scan
+    PYTHONPATH=src python -m repro.lint --contracts      # + compiled-HLO contracts
+    repro-lint                                           # console entry point
+
+Exit status is nonzero iff findings survive; each finding prints as
+``path:line: rule-id: message``.
+
+Layer 1 — the AST rule engine (:mod:`repro.lint.engine` +
+:mod:`repro.lint.rules`).  Stdlib-``ast`` only, no jax import, scans the
+repo in well under a second.  The rule catalog — every rule encodes an
+invariant this codebase already broke once:
+
+=====================  ==================================================
+``jax-api-drift``      shard_map / pallas CompilerParams only via the
+                       repo shims (``repro.sharding``,
+                       ``repro.kernels.tpu_compat``) — upstream renames
+                       land in one file, not every call site
+``raw-cost-analysis``  ``compiled.cost_analysis()`` only through
+                       ``repro.roofline.hlo.xla_cost_analysis`` — the
+                       dict/list/None drift is normalized exactly once
+``clock-discipline``   serve/train/faults/launch code takes an injectable
+                       ``clock`` parameter; bare ``time.time()`` /
+                       ``time.monotonic()`` / ``time.sleep()`` CALLS are
+                       findings (referencing ``time.monotonic`` as a
+                       default is the contract, not a violation)
+``atomic-publish``     durable writes under serve/ and the checkpointer
+                       go tmp-then-``os.replace``; in-place ``open('wb')``
+                       / ``write_text`` on a non-tmp path is a finding
+``fault-site-registry``  fault sites at ``fire()`` / ``FaultSpec`` /
+                       ``FaultPlan.single``/``seeded`` call sites must be
+                       the ``repro.faults.plan`` constants — raw string
+                       literals drift from the validated registry
+``seeded-rng``         only explicitly seeded ``np.random.default_rng``
+                       Generators in library code; legacy global
+                       ``np.random.*`` calls and unseeded
+                       ``default_rng()`` are findings
+``static-aux-hashable``  pytree aux_data in ``register_pytree_node``
+                       flatteners must be hashable — list/dict/set
+                       displays there break the jit trace cache
+=====================  ==================================================
+
+Suppression pragma — inline, audited, reason mandatory::
+
+    do_thing()  # lint: allow(clock-discipline): launcher wall-clock path
+
+A standalone pragma comment (optionally continued over a comment block)
+covers the next code line.  ``allow(...)`` without a reason is itself a
+finding (``lint-pragma``).
+
+Layer 2 — the compiled-program contract checker
+(:mod:`repro.lint.contracts`).  Structural contracts on the actual
+post-SPMD HLO of the serving/training cells (reusing
+``repro.roofline.hlo``): no inter-replica-group collectives, wire-byte
+budgets pinned against the checked-in benchmark CSVs, compile-counter
+flatness across warm bucketed steps, no live per-example ``(B*Q, F, F)``
+outer-product tensor, and no persistent fp32 copy of the int8 frozen
+slice.  Needs jax and a 4-device (emulated) platform, so the CLI re-execs
+itself in a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+— the plain AST scan never imports jax.
+"""
+from repro.lint.engine import (Finding, LintContext, Rule, default_targets,
+                               findings_json, lint_file, lint_paths,
+                               lint_source, repo_root)
+from repro.lint.rules import ALL_RULES, RULES_BY_NAME
+
+__all__ = [
+    "Finding", "LintContext", "Rule", "ALL_RULES", "RULES_BY_NAME",
+    "default_targets", "findings_json", "lint_file", "lint_paths",
+    "lint_source", "repo_root",
+]

@@ -1,0 +1,193 @@
+"""AST rule engine for the repo-native linter.
+
+Deliberately dependency-free (stdlib ``ast`` only — importing this module
+must never import jax): the tier-1 smoke invocation scans the whole repo
+in well under a second.  The engine owns the mechanics — walking files,
+parsing, pragma suppression, finding aggregation — while the rules
+themselves (what is actually checked) live in :mod:`repro.lint.rules`.
+
+Pragma contract (``# lint: allow(<rule>): <reason>``):
+
+* a trailing pragma suppresses findings of ``<rule>`` on its own line;
+* a standalone comment-line pragma also suppresses the line below it
+  (so multi-clause statements can carry a pragma without exceeding the
+  line length);
+* the reason is MANDATORY — an allow without one is itself a finding
+  (rule id ``lint-pragma``), because a suppression nobody can audit is
+  how invariants rot.
+
+Findings are ``path:line: rule-id: message`` (paths repo-relative), and
+the CLI (``python -m repro.lint``) exits nonzero when any survive.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+BAD_PRAGMA_RULE = "lint-pragma"
+
+# trailing or standalone:  # lint: allow(rule-id): reason
+_PRAGMA_RE = re.compile(r"#\s*lint:\s*allow\(([\w-]+)\)\s*(?::\s*(\S.*))?")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    path: str           # repo-relative posix path
+    line: int
+    rule: str
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class LintContext:
+    """Everything a rule sees for one file: the parsed tree, the raw
+    source (for ``ast.get_source_segment``), and the repo-relative path
+    (rules scope themselves on it)."""
+
+    def __init__(self, rel: str, src: str, tree: ast.AST):
+        self.rel = rel
+        self.src = src
+        self.tree = tree
+
+    def segment(self, node: ast.AST) -> str:
+        return ast.get_source_segment(self.src, node) or ""
+
+    def finding(self, node_or_line, rule: str, message: str) -> Finding:
+        line = (node_or_line if isinstance(node_or_line, int)
+                else getattr(node_or_line, "lineno", 0))
+        return Finding(path=self.rel, line=line, rule=rule, message=message)
+
+
+class Rule:
+    """One invariant.  Subclasses set ``name`` (the pragma / CLI id),
+    ``invariant`` (what must hold) and ``recurrence`` (the bug class it
+    prevents — both strings feed the ``--list-rules`` catalog), override
+    ``applies(rel)`` to scope themselves, and implement ``check(ctx)``."""
+
+    name: str = ""
+    invariant: str = ""
+    recurrence: str = ""
+
+    def applies(self, rel: str) -> bool:
+        return True
+
+    def check(self, ctx: LintContext) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def _pragmas(src: str):
+    """Maps line -> {rule, ...} of allows, plus bad-pragma findings-to-be
+    as (line, message) pairs."""
+    allowed: Dict[int, Set[str]] = {}
+    bad: List[tuple] = []
+    for i, line in enumerate(src.splitlines(), 1):
+        m = _PRAGMA_RE.search(line)
+        if not m:
+            continue
+        rule, reason = m.group(1), m.group(2)
+        if not reason:
+            bad.append((i, f"allow({rule}) pragma without a reason — "
+                           f"write '# lint: allow({rule}): <why>' so the "
+                           f"suppression can be audited"))
+            continue
+        allowed.setdefault(i, set()).add(rule)
+        if line.lstrip().startswith("#"):
+            # standalone comment: covers the line it annotates (below);
+            # chains of comment lines extend coverage to the statement
+            allowed.setdefault(i + 1, set()).add(rule)
+    # extend standalone-comment coverage through comment blocks
+    for i in sorted(allowed):
+        j = i
+        lines = src.splitlines()
+        while j <= len(lines) and j - 1 < len(lines) and \
+                lines[j - 1].lstrip().startswith("#"):
+            allowed.setdefault(j + 1, set()).update(allowed[i])
+            j += 1
+    return allowed, bad
+
+
+def lint_source(src: str, rel: str, rules: Sequence[Rule]) -> List[Finding]:
+    """Lint one in-memory source blob as if it lived at repo-relative
+    ``rel`` (rule scoping applies) — the fixture-test workhorse and the
+    single code path ``lint_file`` wraps."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Finding(path=rel, line=e.lineno or 0, rule="syntax-error",
+                        message=f"file does not parse: {e.msg}")]
+    ctx = LintContext(rel, src, tree)
+    allowed, bad = _pragmas(src)
+    out: List[Finding] = [
+        ctx.finding(line, BAD_PRAGMA_RULE, msg) for line, msg in bad]
+    for rule in rules:
+        if not rule.applies(rel):
+            continue
+        for f in rule.check(ctx):
+            if f.rule in allowed.get(f.line, ()):
+                continue
+            out.append(f)
+    return sorted(out)
+
+
+def _rel_path(path: pathlib.Path, root: pathlib.Path) -> str:
+    """Repo-relative path for rule scoping.  A path outside ``root``
+    (fixture files in a tmpdir) is anchored at its last ``src``/``tests``
+    component so the same scoping applies; failing that, its basename."""
+    rp = path.resolve()
+    try:
+        return rp.relative_to(root.resolve()).as_posix()
+    except ValueError:
+        parts = rp.parts
+        for i in range(len(parts) - 1, -1, -1):
+            if parts[i] in ("src", "tests"):
+                return "/".join(parts[i:])
+        return rp.name
+
+
+def lint_file(path: pathlib.Path, root: pathlib.Path,
+              rules: Sequence[Rule]) -> List[Finding]:
+    return lint_source(path.read_text(), _rel_path(path, root), rules)
+
+
+def iter_python_files(targets: Sequence[pathlib.Path]):
+    for t in targets:
+        if t.is_file() and t.suffix == ".py":
+            yield t
+        elif t.is_dir():
+            yield from sorted(p for p in t.rglob("*.py")
+                              if "__pycache__" not in p.parts)
+
+
+def lint_paths(targets: Sequence[pathlib.Path], root: pathlib.Path,
+               rules: Sequence[Rule]) -> List[Finding]:
+    out: List[Finding] = []
+    for path in iter_python_files(targets):
+        out.extend(lint_file(path, root, rules))
+    return sorted(out)
+
+
+def repo_root() -> pathlib.Path:
+    """The repo checkout this installed/`PYTHONPATH`ed package came from
+    (src/repro/lint/engine.py -> three parents up)."""
+    return pathlib.Path(__file__).resolve().parents[3]
+
+
+def default_targets(root: Optional[pathlib.Path] = None) -> List[pathlib.Path]:
+    """The self-scan surface: library code and tests (ISSUE-10 scope)."""
+    root = root or repo_root()
+    return [p for p in (root / "src", root / "tests") if p.exists()]
+
+
+def findings_json(findings: Sequence[Finding]) -> str:
+    return json.dumps([f.to_json() for f in findings], indent=2)

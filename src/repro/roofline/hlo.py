@@ -332,6 +332,25 @@ def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
     return analyze(hlo_text)["collectives"]
 
 
+def xla_cost_analysis(compiled) -> Dict:
+    """Drift-tolerant ``compiled.cost_analysis()``.
+
+    Across jax versions ``cost_analysis()`` has returned a plain dict, a
+    per-device LIST of dicts, or ``None`` — the raw call un-crashed three
+    separate benchmarks before the callers learned to normalize it, each
+    with its own copy of the fix.  This is the one shared shim: always a
+    plain dict (device 0's entry on list-returning versions, ``{}`` when
+    the analysis is absent).  Remember its numbers are loop-NAIVE (see
+    module doc) — use :func:`analyze` for roofline inputs; this exists for
+    cross-checks and the MACs-style accounting the benchmarks print.  The
+    ``raw-cost-analysis`` lint rule rejects bare call sites outside this
+    module."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
 def collectives_report(compiled_or_text) -> Dict:
     """Per-step collective wire bytes of a compiled executable.
 

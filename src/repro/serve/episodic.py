@@ -76,6 +76,7 @@ from repro.core.lite import LiteSpec
 from repro.core.meta_learners import MetaLearner
 from repro.data.episodic import (bucket_for, collate_task_batch,
                                  iter_query_chunks)
+from repro.faults.plan import WARM_CORRUPT, WARM_VANISH
 from repro.serve.quant_params import (dequantize_params, param_bytes,
                                       place_serving_weights, quantize_frozen)
 from repro.train.checkpoint import load_array_tree, save_array_tree
@@ -348,7 +349,7 @@ class WarmTaskStore:
             (old_home / f"uid_{uid}.npz").unlink(missing_ok=True)
             (old_home / f"uid_{uid}.tmpl.pkl").unlink(missing_ok=True)
         if self._fault_plan is not None:
-            spec = self._fault_plan.fire("warm.corrupt", uid)
+            spec = self._fault_plan.fire(WARM_CORRUPT, uid)
             if spec is not None:
                 keep = int(spec.payload) if spec.payload is not None else 16
                 with open(self._path(uid), "r+b") as f:
@@ -437,7 +438,7 @@ class TwoTierTaskStore:
         if not self._warm_live():
             return
         if self._fault_plan is not None and \
-                self._fault_plan.fire("warm.vanish", uid) is not None:
+                self._fault_plan.fire(WARM_VANISH, uid) is not None:
             shutil.rmtree(self.warm.dir, ignore_errors=True)
         try:
             self.warm.put(uid, state)

@@ -102,6 +102,9 @@ def save_array_tree(file, tree: PyTree) -> None:
     verbatim; bf16 via uint16 views)."""
     arrays, dtypes = encode_array_tree(tree)
     crc = _tree_crc32(arrays, dtypes)
+    # lint: allow(atomic-publish): atomicity is this function's documented
+    # caller contract — CheckpointManager.save always hands in a tmp path
+    # and publishes with os.replace after the COMMIT marker
     with open(file, "wb") as f:
         np.savez(f, __dtypes__=np.asarray(json.dumps(dtypes)),
                  __crc32__=np.uint32(crc), **arrays)
@@ -178,9 +181,10 @@ class CheckpointManager:
             os.fsync(f.fileno())
         meta = dict(step=step, dtypes=dtypes, extra=extra or {})
         (tmp / "meta.json").write_text(json.dumps(meta))
-        self._maybe_kill("ckpt.pre_commit", step)
+        from repro.faults.plan import CKPT_PRE_COMMIT, CKPT_PRE_REPLACE
+        self._maybe_kill(CKPT_PRE_COMMIT, step)
         (tmp / "COMMIT").write_text("ok")
-        self._maybe_kill("ckpt.pre_replace", step)
+        self._maybe_kill(CKPT_PRE_REPLACE, step)
         if final.exists():
             shutil.rmtree(final)
         os.replace(tmp, final)           # atomic publish
